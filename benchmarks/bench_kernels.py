@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs XLA reference on CPU.
+
+On this CPU container, interpret-mode timings measure the kernel *body
+semantics*, not TPU performance — the roofline table (EXPERIMENTS.md) is
+the performance source of truth.  This bench (a) proves the kernels run,
+(b) times the XLA reference path that the engines actually execute on CPU.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops
+
+
+def _time(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # compile
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+def bench_kernels() -> List[Dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for (B, T, Hq, Hkv, D) in [(4, 128, 8, 2, 64), (2, 512, 8, 8, 64)]:
+        q = jax.random.normal(key, (B, T, Hq, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, Hkv, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hkv, D))
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+        us_xla = _time(ops.prefill_attention, q, k, v, pos, impl="xla")
+        rows.append(dict(kernel="flash_prefill", shape=f"B{B}xT{T}xH{Hq}kv{Hkv}xD{D}",
+                         impl="xla_ref", us_per_call=round(us_xla, 1)))
+    for (B, W, Hq, Hkv, D) in [(8, 1024, 8, 2, 64), (32, 2048, 8, 1, 64)]:
+        kc = jax.random.normal(key, (B, W, Hkv, D))
+        vc = jax.random.normal(jax.random.fold_in(key, 3), (B, W, Hkv, D))
+        qd = jax.random.normal(jax.random.fold_in(key, 4), (B, Hq, D))
+        slot_pos = jnp.broadcast_to(jnp.arange(W)[None], (B, W)).astype(jnp.int32)
+        q_pos = jnp.full((B,), W - 1, jnp.int32)
+        us_xla = _time(ops.decode_gqa_attention, qd, kc, vc, slot_pos, q_pos,
+                       impl="xla")
+        rows.append(dict(kernel="decode_attention", shape=f"B{B}xW{W}xH{Hq}kv{Hkv}xD{D}",
+                         impl="xla_ref", us_per_call=round(us_xla, 1)))
+    # interpret-mode correctness spot check (tiny shape; slow by design)
+    q = jax.random.normal(key, (1, 32, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 5), (1, 32, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 6), (1, 32, 2, 16))
+    pos = jnp.arange(32)[None].astype(jnp.int32)
+    a = ops.prefill_attention(q, k, v, pos, impl="pallas", block_q=8, block_k=8)
+    b = ops.prefill_attention(q, k, v, pos, impl="xla")
+    rows.append(dict(kernel="flash_prefill", shape="pallas_interp_check",
+                     impl="pallas", us_per_call=float(jnp.abs(a - b).max())))
+    emit(rows, "kernels")
+    return rows

@@ -1,0 +1,35 @@
+"""Roofline table assembly: reads dryrun_results/*.json (produced by
+``python -m repro.launch.dryrun --all``) into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+
+def bench_roofline(results_dir: str = "dryrun_results") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = rec.get("roofline", {})
+        rows.append(dict(
+            arch=rec["arch"], shape=rec["shape"],
+            mesh="x".join(str(v) for v in rec["mesh"].values()),
+            compute_s=f"{r.get('compute_s', 0):.3e}",
+            memory_s=f"{r.get('memory_s', 0):.3e}",
+            collective_s=f"{r.get('collective_s', 0):.3e}",
+            dominant=rec.get("dominant", "?"),
+            useful_flop_ratio=(f"{rec['useful_flop_ratio']:.3f}"
+                               if rec.get("useful_flop_ratio") else "-"),
+            compile_s=rec.get("compile_s", "-"),
+        ))
+    if rows:
+        emit(rows, "roofline")
+    else:
+        print("[roofline] no dryrun_results/*.json yet — run "
+              "`python -m repro.launch.dryrun --all` first")
+    return rows

@@ -1,0 +1,86 @@
+"""Shared setup for the paper-figure benchmarks.
+
+All cluster-scale figures run the real scheduler code through the
+calibrated discrete-event simulator (8 LLaMA2-13B-profile workers, as in
+the paper's testbed); engine-level figures run the real JAX engine on CPU
+with reduced models.  Default durations are trimmed for CI; ``--full``
+restores the paper's 600 s traces.
+"""
+from __future__ import annotations
+
+import copy
+import os
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.trace import CODEFUSE, generate_trace
+from repro.core.estimator import (ServingTimeEstimator, a100_llama13b_profile,
+                                  a100_llama13b_hf_profile)
+from repro.core.memory import (A100_80GB_AVAILABLE, AnalyticMemoryEstimator,
+                               LLAMA2_13B_DELTA, RuleBasedMemoryEstimator)
+from repro.core.schedulers import make_strategy
+
+FULL = "--full" in sys.argv
+DURATION = 600.0 if FULL else 180.0
+N_WORKERS = 8
+OUT_DIR = os.environ.get("BENCH_OUT", "bench_results")
+
+_PROFILES = {"ds": a100_llama13b_profile, "hf": a100_llama13b_hf_profile}
+# paper §5.1: fixed batch size 12 (DS) / 16 (HF); Γ = 3 s (DS) / 6 s (HF)
+_ENGINE_SETTINGS = {"ds": dict(fixed_batch_size=12, gamma=3.0),
+                    "hf": dict(fixed_batch_size=16, gamma=6.0)}
+
+
+def fitted_estimator(true_lat: ServingTimeEstimator, seed=0
+                     ) -> ServingTimeEstimator:
+    """'Profile' the ground-truth latency model with 2% measurement noise
+    and fit Eq. 3/4 — mirrors the paper's one-time profiling."""
+    rng = np.random.default_rng(seed)
+    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    return est
+
+
+def memory_estimator(engine: str):
+    if engine == "ds":  # paper: rule table (Algorithm 2)
+        return RuleBasedMemoryEstimator()
+    return AnalyticMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                   m_available=A100_80GB_AVAILABLE, zeta=0.9)
+
+
+def run_sim(strategy_name: str, rate: float, engine: str = "ds",
+            slice_len: int = 128, duration: float = None,
+            n_workers: int = N_WORKERS, seed: int = 1, trace=None):
+    duration = duration or DURATION
+    true_lat = _PROFILES[engine]()
+    est = fitted_estimator(true_lat)
+    mem = memory_estimator(engine)
+    es = _ENGINE_SETTINGS[engine]
+    s = make_strategy(strategy_name, slice_len=slice_len,
+                      fixed_batch_size=es["fixed_batch_size"],
+                      gamma=es["gamma"], max_parallel=es["fixed_batch_size"])
+    if trace is None:
+        trace = generate_trace(rate, duration, CODEFUSE, seed=seed)
+    sim = ClusterSimulator(s, n_workers, true_lat, est, mem,
+                           noise_sigma=0.02, seed=seed + 1)
+    return sim.run(copy.deepcopy(trace), duration)
+
+
+def emit(rows: List[Dict], name: str) -> None:
+    """Print rows and save a CSV under bench_results/."""
+    if not rows:
+        return
+    os.makedirs(OUT_DIR, exist_ok=True)
+    keys = list(rows[0].keys())
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+    print(f"[{name}] -> {path}")

@@ -1,0 +1,193 @@
+"""One benchmark function per paper table/figure (Figs. 8–22).
+
+Each returns a list of row-dicts; ``benchmarks.run`` drives them all and
+prints the summary CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (DURATION, N_WORKERS, emit, fitted_estimator,
+                               memory_estimator, run_sim)
+from repro.cluster.trace import CODEFUSE, SHAREGPT, generate_trace, \
+    length_distribution_summary
+from repro.core.estimator import (a100_llama13b_hf_profile,
+                                  a100_llama13b_profile)
+
+RATES = (12, 16, 20, 24)
+
+
+# ---------------------------------------------------------------------------
+def bench_fig6_length_distribution() -> List[Dict]:
+    rows = []
+    for name, spec in (("codefuse", CODEFUSE), ("sharegpt", SHAREGPT)):
+        t = generate_trace(20, DURATION, spec, seed=0)
+        s = length_distribution_summary(t)
+        s["workload"] = name
+        rows.append(s)
+    emit(rows, "fig6_length_distribution")
+    return rows
+
+
+def bench_fig8_10_estimator() -> List[Dict]:
+    """Estimator fit error: per-iteration and 128-iteration RMSE (Fig. 10)."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for engine, prof in (("ds", a100_llama13b_profile),
+                         ("hf", a100_llama13b_hf_profile)):
+        true = prof()
+        est = fitted_estimator(true, seed=3)
+        # held-out grid
+        grid = [(N, L) for N in (3, 6, 12, 24) for L in (48, 192, 768)]
+        e1 = [est.tau_decode(L, N) - true.tau_decode(L, N) for N, L in grid]
+        e128 = [est.t_serve(N, L, 128) - true.t_serve(N, L, 128) for N, L in grid]
+        ep = [est.t_prefill(N, L) - true.t_prefill(N, L) for N, L in grid]
+        rows.append(dict(engine=engine,
+                         prefill_rmse_s=float(np.sqrt(np.mean(np.square(ep)))),
+                         decode_iter_rmse_s=float(np.sqrt(np.mean(np.square(e1)))),
+                         serve128_rmse_s=float(np.sqrt(np.mean(np.square(e128))))))
+    emit(rows, "fig8_10_estimator_error")
+    return rows
+
+
+def bench_fig12_throughput() -> List[Dict]:
+    """Throughput / mean / p95 response under various arrival rates."""
+    rows = []
+    for engine in ("ds", "hf"):
+        strategies = (("sls", "ils", "scls", "scls-cb") if engine == "ds"
+                      else ("sls", "scls"))
+        for rate in RATES:
+            for s in strategies:
+                m = run_sim(s, rate, engine=engine).metrics
+                rows.append(dict(engine=engine, rate=rate, strategy=m.name,
+                                 throughput=round(m.throughput, 3),
+                                 mean_response_s=round(m.mean_response, 2),
+                                 p95_response_s=round(m.p95_response, 2)))
+    emit(rows, "fig12_throughput_response")
+    return rows
+
+
+def bench_fig13_dive() -> List[Dict]:
+    """Invalid tokens / batch size / pad tokens, SLS vs SCLS (Fig. 13)."""
+    rows = []
+    for engine in ("ds", "hf"):
+        for rate in RATES:
+            for s in ("sls", "scls"):
+                m = run_sim(s, rate, engine=engine).metrics
+                rows.append(dict(engine=engine, rate=rate, strategy=m.name,
+                                 invalid_tokens=round(m.avg_invalid_tokens, 1),
+                                 batch_size=round(m.avg_batch_size, 1),
+                                 pad_tokens=round(m.avg_pad_tokens, 1)))
+    emit(rows, "fig13_dive")
+    return rows
+
+
+def bench_fig14_overhead() -> List[Dict]:
+    """Reschedule (slice) count distribution + early return ratio (Fig. 14)."""
+    rows = []
+    for rate in RATES:
+        res = run_sim("scls", rate)
+        sched = np.array([r.n_schedules for r in res.requests if r.done])
+        hist = {f"slices_{i}": float(np.mean(sched == i)) for i in (1, 2, 3)}
+        hist["slices_ge4"] = float(np.mean(sched >= 4))
+        rows.append(dict(rate=rate, early_return_ratio=round(
+            res.metrics.early_return_ratio, 4), **hist))
+    emit(rows, "fig14_overhead")
+    return rows
+
+
+def bench_fig15_16_ablation() -> List[Dict]:
+    """SO -> PM -> AB -> LB -> SCLS at rate 20 (Figs. 15-16)."""
+    rows = []
+    for engine in ("ds", "hf"):
+        for s in ("sls", "so", "pm", "ab", "lb", "scls", "scls-cb"):
+            m = run_sim(s, 20, engine=engine).metrics
+            rows.append(dict(engine=engine, strategy=m.name,
+                             throughput=round(m.throughput, 3),
+                             mean_response_s=round(m.mean_response, 2),
+                             p95_response_s=round(m.p95_response, 2),
+                             invalid_tokens=round(m.avg_invalid_tokens, 1),
+                             batch_size=round(m.avg_batch_size, 1),
+                             pad_tokens=round(m.avg_pad_tokens, 1)))
+    emit(rows, "fig15_16_ablation")
+    return rows
+
+
+def bench_fig17_load_balance() -> List[Dict]:
+    """STD of instance completion time (Fig. 17)."""
+    rows = []
+    for rate in RATES:
+        for s in ("sls", "ils", "scls"):
+            m = run_sim(s, rate).metrics
+            rows.append(dict(rate=rate, strategy=m.name,
+                             ct_std_s=round(m.ct_std, 2)))
+    emit(rows, "fig17_load_balance")
+    return rows
+
+
+def bench_fig18_21_slice_length() -> List[Dict]:
+    """Slice-length sweep at rate 20 (Figs. 18-21)."""
+    rows = []
+    for S in (32, 64, 128, 256, 512):
+        res = run_sim("scls", 20, slice_len=S)
+        m = res.metrics
+        sched = np.array([r.n_schedules for r in res.requests if r.done])
+        rows.append(dict(slice_len=S,
+                         throughput=round(m.throughput, 3),
+                         mean_response_s=round(m.mean_response, 2),
+                         p95_response_s=round(m.p95_response, 2),
+                         invalid_tokens=round(m.avg_invalid_tokens, 1),
+                         batch_size=round(m.avg_batch_size, 1),
+                         pad_tokens=round(m.avg_pad_tokens, 1),
+                         mean_slices=round(float(sched.mean()), 2),
+                         early_return_ratio=round(m.early_return_ratio, 4),
+                         ct_std_s=round(m.ct_std, 2)))
+    emit(rows, "fig18_21_slice_length")
+    return rows
+
+
+def bench_fig22_scalability() -> List[Dict]:
+    """Throughput vs #workers at rate 20 (Fig. 22)."""
+    rows = []
+    for engine in ("ds", "hf"):
+        for w in (1, 2, 4, 8):
+            m = run_sim("scls", 20, engine=engine, n_workers=w).metrics
+            rows.append(dict(engine=engine, workers=w,
+                             throughput=round(m.throughput, 3)))
+    emit(rows, "fig22_scalability")
+    return rows
+
+
+def bench_beyond_paper() -> List[Dict]:
+    """Beyond-paper comparisons: SCLS-CB (paper §7 future work, implemented)
+    and ORACLE (perfect length predictor upper bound, cf. PiA/S³)."""
+    rows = []
+    for rate in (16, 24):
+        for s in ("ils", "scls", "scls-cb", "oracle"):
+            m = run_sim(s, rate).metrics
+            rows.append(dict(rate=rate, strategy=m.name,
+                             throughput=round(m.throughput, 3),
+                             mean_response_s=round(m.mean_response, 2),
+                             p95_response_s=round(m.p95_response, 2),
+                             ct_std_s=round(m.ct_std, 2),
+                             invalid_tokens=round(m.avg_invalid_tokens, 1),
+                             pad_tokens=round(m.avg_pad_tokens, 1)))
+    emit(rows, "beyond_paper")
+    return rows
+
+
+ALL_FIGURES = [
+    bench_fig6_length_distribution,
+    bench_fig8_10_estimator,
+    bench_fig12_throughput,
+    bench_fig13_dive,
+    bench_fig14_overhead,
+    bench_fig15_16_ablation,
+    bench_fig17_load_balance,
+    bench_fig18_21_slice_length,
+    bench_fig22_scalability,
+    bench_beyond_paper,
+]

@@ -1,0 +1,45 @@
+"""Benchmark driver: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark row (the
+harness contract) and writes full CSVs under bench_results/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_roofline import bench_roofline
+    from benchmarks.figures import ALL_FIGURES
+
+    only = None
+    for a in sys.argv[1:]:
+        if a.startswith("--only"):
+            only = a.split("=", 1)[1].split(",") if "=" in a else None
+
+    benches = list(ALL_FIGURES) + [bench_kernels, bench_roofline]
+    print("name,us_per_call,derived")
+    for fn in benches:
+        name = fn.__name__
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+            dt = (time.perf_counter() - t0) * 1e6
+            derived = f"rows={len(rows)}"
+            if rows and "throughput" in rows[0]:
+                best = max(float(r["throughput"]) for r in rows)
+                derived += f";best_thr={best}"
+            print(f"{name},{dt:.0f},{derived}")
+        except Exception as e:  # keep the suite going
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

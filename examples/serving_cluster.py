@@ -1,0 +1,56 @@
+"""Paper-scale cluster comparison: SLS vs ILS vs SCLS (+ ablations) on
+8 simulated A100/LLaMA2-13B workers — reproduces the shape of Fig. 12/15/17.
+
+  PYTHONPATH=src python examples/serving_cluster.py [--rate 20] [--duration 300]
+"""
+import argparse
+import copy
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.trace import CODEFUSE, generate_trace
+from repro.core.estimator import ServingTimeEstimator, a100_llama13b_profile
+from repro.core.memory import RuleBasedMemoryEstimator
+from repro.core.schedulers import ALL_STRATEGIES, make_strategy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--duration", type=float, default=300.0)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--slice-len", type=int, default=128)
+    args = ap.parse_args()
+
+    true_lat = a100_llama13b_profile()
+    rng = np.random.default_rng(0)
+    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    mem = RuleBasedMemoryEstimator()  # paper Algorithm 2 (DS engine)
+    trace = generate_trace(args.rate, args.duration, CODEFUSE, seed=1)
+    print(f"{len(trace)} requests @ {args.rate}/s over {args.duration:.0f}s, "
+          f"{args.workers} workers (DS profile)\n")
+    hdr = f"{'strategy':8s} {'thr(req/s)':>10s} {'resp(s)':>9s} {'p95(s)':>8s} " \
+          f"{'CTstd(s)':>9s} {'batch':>6s} {'invalid':>8s} {'pads':>7s}"
+    print(hdr)
+    print("-" * len(hdr))
+    for name in ALL_STRATEGIES:
+        s = make_strategy(name, slice_len=args.slice_len, fixed_batch_size=12,
+                          gamma=3.0, max_parallel=12)
+        sim = ClusterSimulator(s, args.workers, true_lat, est, mem,
+                               noise_sigma=0.02, seed=2)
+        m = sim.run(copy.deepcopy(trace), args.duration).metrics
+        print(f"{m.name:8s} {m.throughput:10.2f} {m.mean_response:9.1f} "
+              f"{m.p95_response:8.1f} {m.ct_std:9.1f} {m.avg_batch_size:6.1f} "
+              f"{m.avg_invalid_tokens:8.1f} {m.avg_pad_tokens:7.1f}")
+
+
+if __name__ == "__main__":
+    main()

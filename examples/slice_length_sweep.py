@@ -1,0 +1,45 @@
+"""Slice-length trade-off (paper §5.5, Figs. 18-21): sweep S and watch the
+throughput curve rise then fall as reschedule overhead trades against
+batch size and request waiting.
+
+  PYTHONPATH=src python examples/slice_length_sweep.py
+"""
+import copy
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.trace import CODEFUSE, generate_trace
+from repro.core.estimator import ServingTimeEstimator, a100_llama13b_profile
+from repro.core.memory import RuleBasedMemoryEstimator
+from repro.core.schedulers import make_strategy
+
+
+def main():
+    true_lat = a100_llama13b_profile()
+    rng = np.random.default_rng(0)
+    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    mem = RuleBasedMemoryEstimator()
+    trace = generate_trace(20.0, 300.0, CODEFUSE, seed=1)
+    print(f"{'S':>5s} {'thr':>7s} {'resp(s)':>8s} {'slices':>7s} "
+          f"{'batch':>6s} {'pads':>7s} {'early%':>7s} {'CTstd':>6s}")
+    for S in (16, 32, 64, 128, 256, 512, 1024):
+        s = make_strategy("scls", slice_len=S, fixed_batch_size=12, gamma=3.0)
+        sim = ClusterSimulator(s, 8, true_lat, est, mem, noise_sigma=0.02, seed=2)
+        res = sim.run(copy.deepcopy(trace), 300.0)
+        m = res.metrics
+        sched = np.mean([r.n_schedules for r in res.requests if r.done])
+        print(f"{S:5d} {m.throughput:7.2f} {m.mean_response:8.1f} {sched:7.2f} "
+              f"{m.avg_batch_size:6.1f} {m.avg_pad_tokens:7.1f} "
+              f"{100*m.early_return_ratio:7.2f} {m.ct_std:6.1f}")
+
+
+if __name__ == "__main__":
+    main()

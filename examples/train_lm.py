@@ -1,0 +1,26 @@
+"""Train a reduced-config LM end to end (substrate check: data pipeline ->
+model -> AdamW -> checkpoint), for any assigned architecture.
+
+  PYTHONPATH=src python examples/train_lm.py [--arch mamba2-130m] [--steps 150]
+"""
+import argparse
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+    # the launcher is the real entry point; this example just drives it
+    from repro.launch import train
+    sys.argv = ["train", "--arch", args.arch, "--steps", str(args.steps),
+                "--batch", "8", "--seq", "64", "--ckpt", "/tmp/repro_ckpt"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

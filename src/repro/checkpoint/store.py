@@ -1,0 +1,58 @@
+"""Checkpointing: flatten pytrees to npz + a JSON manifest (no orbax)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):  # jax flattens dicts in sorted-key order
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    extra: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    arrays = _flatten({"params": params})
+    if opt_state is not None:
+        arrays.update(_flatten({"opt": opt_state}))
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{k.replace("/", "|"): v for k, v in arrays.items()})
+    manifest = {"step": step, "extra": extra or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None
+                    ) -> Tuple[Any, Any, int, dict]:
+    data = np.load(os.path.join(path, "arrays.npz"))
+    arrays = {k.replace("|", "/"): data[k] for k in data.files}
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def rebuild(template, prefix):
+        leaves, treedef = jax.tree.flatten(template)
+        paths = _flatten(template)
+        # reconstruct in the same flatten order
+        flat = _flatten(template, prefix)
+        vals = [arrays[k] for k in flat]
+        return jax.tree.unflatten(treedef, vals)
+
+    params = rebuild(params_template, "params/")
+    opt = rebuild(opt_template, "opt/") if opt_template is not None else None
+    return params, opt, manifest["step"], manifest["extra"]

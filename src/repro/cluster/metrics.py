@@ -1,0 +1,56 @@
+"""Run metrics matching the paper's evaluation (§5.1 Metrics + dive figures)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.request import Request
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    name: str
+    duration: float
+    n_requests: int
+    n_completed: int
+    throughput: float           # completed requests / s (paper Fig. 12 top)
+    mean_response: float        # paper Fig. 12 middle
+    p95_response: float         # paper Fig. 12 bottom
+    ct_std: float               # STD of worker completion times (Fig. 17)
+    avg_batch_size: float       # Fig. 13b
+    avg_invalid_tokens: float   # Fig. 13a
+    avg_pad_tokens: float       # Fig. 13c
+    avg_schedules: float        # Fig. 14a (slice count)
+    early_return_ratio: float   # Fig. 14b
+    makespan: float
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def compute_metrics(name: str, requests: Sequence[Request], duration: float,
+                    worker_completion_times: Sequence[float],
+                    batch_sizes: Sequence[int],
+                    early_returns: int, total_batches: int) -> RunMetrics:
+    done = [r for r in requests if r.done and r.finish_time is not None]
+    resp = np.array([r.response_time() for r in done]) if done else np.array([0.0])
+    ct = np.array(list(worker_completion_times)) if worker_completion_times else np.array([0.0])
+    bs = np.array(list(batch_sizes)) if batch_sizes else np.array([0.0])
+    return RunMetrics(
+        name=name,
+        duration=duration,
+        n_requests=len(requests),
+        n_completed=len(done),
+        throughput=len(done) / max(ct.max(), duration, 1e-9),
+        mean_response=float(resp.mean()),
+        p95_response=float(np.percentile(resp, 95)),
+        ct_std=float(ct.std()),
+        avg_batch_size=float(bs.mean()),
+        avg_invalid_tokens=float(np.mean([r.invalid_tokens for r in requests])),
+        avg_pad_tokens=float(np.mean([r.pad_tokens for r in requests])),
+        avg_schedules=float(np.mean([r.n_schedules for r in requests])),
+        early_return_ratio=early_returns / max(total_batches, 1),
+        makespan=float(ct.max()),
+    )

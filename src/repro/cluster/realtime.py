@@ -1,0 +1,111 @@
+"""Real-execution cluster: the same scheduler code as the simulator, but
+workers run batches on real JAX engines (StaticEngine), every FLOP real.
+
+One physical CPU hosts all workers, so each worker keeps a *virtual clock*
+advanced by the measured wall time of its own batches — worker i's timeline
+is exactly what i parallel machines would see (scheduling decisions use
+virtual time only).  Token outcomes (EOS, invalid, pads) come from the
+engine, not from the latency model.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.metrics import RunMetrics, compute_metrics
+from repro.core.batcher import dp_batch
+from repro.core.estimator import ServingTimeEstimator
+from repro.core.interval import next_interval
+from repro.core.memory import MemoryEstimator
+from repro.core.offloader import MaxMinOffloader, RoundRobinOffloader
+from repro.core.request import Batch, Request
+from repro.core.schedulers import StrategyConfig
+from repro.engine.static_engine import StaticEngine
+
+
+class RealCluster:
+    """Central-mode strategies (PM/AB/LB/SCLS) against real engines."""
+
+    def __init__(self, strategy: StrategyConfig, engines: Sequence[StaticEngine],
+                 sched_est: ServingTimeEstimator, mem: MemoryEstimator):
+        assert strategy.mode == "central"
+        self.s = strategy
+        self.engines = list(engines)
+        self.n_workers = len(engines)
+        self.est = sched_est
+        self.mem = mem
+        self.offloader = (MaxMinOffloader(self.n_workers)
+                          if strategy.offload == "maxmin"
+                          else RoundRobinOffloader(self.n_workers))
+        self.pool: List[Request] = []
+        self.worker_time = [0.0] * self.n_workers
+        self.worker_queue: List[List[Batch]] = [[] for _ in range(self.n_workers)]
+        self.batch_sizes: List[int] = []
+        self.early_returns = 0
+        self.total_batches = 0
+        self.generated_tokens: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------
+    def _serve_on_worker(self, w: int, b: Batch, start_time: float) -> float:
+        """Run batch b on engine w; returns completion (virtual) time."""
+        eng = self.engines[w]
+        prompts = [r.prompt for r in b.requests]
+        prev = [self.generated_tokens.get(r.rid, []) for r in b.requests]
+        forced = [r.remaining_gen for r in b.requests]
+        res = eng.serve_batch(prompts, b.slice_len, forced_gen_lens=forced,
+                              already_generated=prev)
+        t_done = start_time + res.wall_time
+        self.total_batches += 1
+        self.batch_sizes.append(b.size)
+        if res.early_return:
+            self.early_returns += 1
+        for r, rr in zip(b.requests, res.results):
+            r.n_schedules += 1
+            r.pad_tokens += rr["pad"]
+            r.invalid_tokens += rr["invalid"]
+            r.generated += rr["n_valid"]
+            self.generated_tokens.setdefault(r.rid, []).extend(rr["tokens"])
+            if r.first_token_time is None:
+                r.first_token_time = t_done
+            if r.remaining_gen <= 0:
+                r.done = True
+                r.finish_time = t_done
+                r.output_tokens = self.generated_tokens.pop(r.rid)
+            else:
+                self.pool.append(r)
+        self.offloader.on_batch_complete(w, b.est_time)
+        return t_done
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request], duration: float) -> RunMetrics:
+        arrivals = sorted(requests, key=lambda r: r.arrival)
+        now = 0.0
+        idx = 0
+        while True:
+            # admit arrivals up to the current virtual time
+            while idx < len(arrivals) and arrivals[idx].arrival <= now:
+                self.pool.append(arrivals[idx])
+                idx += 1
+            if not self.pool and idx < len(arrivals):
+                now = max(now, arrivals[idx].arrival)
+                continue
+            if not self.pool and idx >= len(arrivals):
+                break
+            # one scheduling round
+            reqs, self.pool = self.pool, []
+            batches = dp_batch(reqs, self.s.slice_len, self.est, self.mem,
+                               max_batch_size=self.s.dp_cap)
+            for w, b in self.offloader.assign(batches):
+                start = max(self.worker_time[w], now)
+                self.worker_time[w] = self._serve_on_worker(w, b, start)
+            if self.s.adaptive_interval:
+                dt = next_interval(self.offloader.min_load(), self.s.lam, self.s.gamma)
+            else:
+                dt = self.s.gamma
+            now += dt
+        return compute_metrics(self.s.name, list(requests), duration,
+                               self.worker_time, self.batch_sizes,
+                               self.early_returns, self.total_batches)

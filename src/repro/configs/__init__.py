@@ -1,0 +1,36 @@
+"""Architecture config registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.common import ModelConfig
+
+from repro.configs import (codeqwen1_5_7b, deepseek_v2_lite_16b, gemma_2b,
+                           llama3_2_1b, mamba2_130m, minitron_4b,
+                           mixtral_8x22b, paligemma_3b, recurrentgemma_9b,
+                           seamless_m4t_large_v2)
+from repro.configs.shapes import SHAPES, InputShape, effective_window, token_specs
+
+_MODULES = {
+    "llama3.2-1b": llama3_2_1b,
+    "mamba2-130m": mamba2_130m,
+    "seamless-m4t-large-v2": seamless_m4t_large_v2,
+    "paligemma-3b": paligemma_3b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "gemma-2b": gemma_2b,
+    "minitron-4b": minitron_4b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "codeqwen1.5-7b": codeqwen1_5_7b,
+    "mixtral-8x22b": mixtral_8x22b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = _MODULES[arch]
+    return mod.reduced() if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCHS}

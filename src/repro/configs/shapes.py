@@ -1,0 +1,67 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+Decode shapes lower ``serve_step`` (one new token + KV cache of seq_len);
+train_4k lowers ``train_step``; prefill_32k lowers the prefill step.
+long_500k substitutes a sliding window on full-attention archs
+(cfg.long_context_window) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape):
+    """Window override for long-context decode on full-attention archs."""
+    if shape.name != "long_500k":
+        return cfg.sliding_window
+    if cfg.family in ("ssm", "hybrid"):
+        return cfg.sliding_window  # native sub-quadratic
+    if cfg.sliding_window is not None:
+        return cfg.sliding_window  # e.g. mixtral SWA
+    return cfg.long_context_window
+
+
+def token_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.int32
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, T = shape.global_batch, shape.seq_len
+    f = jnp.bfloat16 if jnp.dtype(cfg.dtype) == jnp.bfloat16 else cfg.dtype
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {"tokens": sds((B, T), dtype)}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = sds((B, T, cfg.d_model), f)
+        if cfg.family == "vlm":
+            batch["tokens"] = sds((B, T - cfg.n_prefix_tokens), dtype)
+            batch["prefix_embeds"] = sds((B, cfg.n_prefix_tokens, cfg.d_model), f)
+        return batch
+    # serving shapes: prefill input or decode-step token batch
+    batch = {"tokens": sds((B, T), dtype), "lengths": sds((B,), jnp.int32)}
+    if cfg.family == "encdec":
+        # decode against a fixed 4096-frame encoder memory (DESIGN.md §5)
+        batch["src_embeds"] = sds((B, 4096, cfg.d_model), f)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = sds((B, cfg.n_prefix_tokens, cfg.d_model), f)
+    return batch

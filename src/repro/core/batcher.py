@@ -1,0 +1,83 @@
+"""Serving time-oriented batching (paper §4.4, Algorithm 1).
+
+Sort requests ascending by effective input length; a dynamic program over
+the sorted order partitions them into contiguous batches minimizing total
+estimated serving time, subject to the no-OOM constraint.  Because requests
+are sorted, request i's input length is the batch input length for any
+batch ending at i, so each DP transition is O(1) via the estimator's closed
+form.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.core.estimator import ServingTimeEstimator
+from repro.core.memory import MemoryEstimator
+from repro.core.request import Batch, Request, bucket_len
+
+
+def dp_batch(requests: Sequence[Request], slice_len: int,
+             est: ServingTimeEstimator, mem: MemoryEstimator,
+             max_batch_size: Optional[int] = None) -> List[Batch]:
+    """Algorithm 1.  ``max_batch_size`` caps N (None = unbounded, the full
+    adaptive batcher; the PM ablation passes the engine's fixed size)."""
+    if not requests:
+        return []
+    reqs = sorted(requests, key=lambda r: r.effective_input_len)
+    n = len(reqs)
+    INF = float("inf")
+    T = [0.0] + [INF] * n  # T[i]: min total time for first i requests
+    P = [0] * (n + 1)      # split positions
+
+    lens = [r.effective_input_len for r in reqs]
+    for i in range(1, n + 1):
+        L_i = lens[i - 1]
+        # request i as its own batch
+        T[i] = T[i - 1] + est.t_serve(1, L_i, slice_len)
+        P[i] = i - 1
+        # widen the batch over preceding requests j..i
+        j = i - 1
+        while j > 0:
+            N = i - j + 1
+            if max_batch_size is not None and N > max_batch_size:
+                break
+            if not mem.fits(N, L_i, slice_len):
+                break
+            t = T[j - 1] + est.t_serve(N, L_i, slice_len)
+            if t < T[i]:
+                T[i] = t
+                P[i] = j - 1
+            j -= 1
+
+    batches: List[Batch] = []
+    i = n
+    while i > 0:
+        p = P[i]
+        group = reqs[p:i]
+        L = group[-1].effective_input_len  # sorted: last has the max
+        b = Batch(requests=list(group), input_len=bucket_len(L, est.bucket),
+                  slice_len=slice_len)
+        b.est_time = est.t_serve(b.size, L, slice_len)
+        batches.append(b)
+        i = p
+    batches.reverse()
+    return batches
+
+
+def fcfs_batch(requests: Sequence[Request], batch_size: int, slice_len: int,
+               est: Optional[ServingTimeEstimator] = None) -> List[Batch]:
+    """SLS / SO baseline batching: FCFS order, fixed batch size."""
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    batches = []
+    for i in range(0, len(reqs), batch_size):
+        group = reqs[i:i + batch_size]
+        L = max(r.effective_input_len for r in group)
+        b = Batch(requests=group, input_len=L, slice_len=slice_len)
+        if est is not None:
+            b.est_time = est.t_serve(b.size, L, slice_len)
+        batches.append(b)
+    return batches
+
+
+def total_time(batches: Sequence[Batch]) -> float:
+    return sum(b.est_time for b in batches)

@@ -1,0 +1,89 @@
+"""Memory-usage estimator (paper §4.3, Eq. 5–9 + Algorithm 2).
+
+Two implementations, as in the paper:
+  * AnalyticMemoryEstimator — Eq. 5/9: KV bytes = (L_i + S)·N·Δ ≤ ζ·M_ava,
+    for engines with predictable allocators (HF in the paper; our JAX engine
+    is exactly predictable, so ζ defaults to 1.0 there).  Mesh-aware: Δ is
+    per model-shard (DESIGN.md §8.3).
+  * RuleBasedMemoryEstimator — Algorithm 2's profiled rule table for engines
+    with opaque allocators (DS in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.core.request import bucket_len
+
+
+class MemoryEstimator:
+    def fits(self, N: int, L_i: int, S: int) -> bool:
+        raise NotImplementedError
+
+    def max_batch_size(self, L_i: int, S: int) -> int:
+        """Largest N with fits(N, L_i, S) — Eq. 8 for the analytic case."""
+        lo, hi = 0, 1
+        while self.fits(hi, L_i, S):
+            hi *= 2
+            if hi > 1 << 20:
+                return hi
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if self.fits(mid, L_i, S):
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
+
+@dataclasses.dataclass
+class AnalyticMemoryEstimator(MemoryEstimator):
+    delta_bytes: float          # Δ: KV bytes per token (per model shard)
+    m_available: float          # M_ava = M_cap - M_model - M_engine (bytes)
+    zeta: float = 1.0           # engine fragmentation factor (Eq. 9)
+    bucket: int = 1
+
+    def kv_bytes(self, N: int, L_i: int, S: int) -> float:
+        return (bucket_len(L_i, self.bucket) + S) * N * self.delta_bytes  # Eq. 5
+
+    def fits(self, N: int, L_i: int, S: int) -> bool:
+        if N <= 0:
+            return True
+        return self.kv_bytes(N, L_i, S) <= self.zeta * self.m_available  # Eq. 9
+
+    def max_batch_size(self, L_i: int, S: int) -> int:  # Eq. 8 closed form
+        denom = self.delta_bytes * (bucket_len(L_i, self.bucket) + S)
+        if denom <= 0:
+            return 1 << 20
+        return int(self.zeta * self.m_available // denom)
+
+
+@dataclasses.dataclass
+class RuleBasedMemoryEstimator(MemoryEstimator):
+    """Paper Algorithm 2: total-token thresholds -> max batch size.
+
+    ``rules`` is a list of (min_total_len_exclusive, max_batch) sorted
+    descending; the default is the paper's DS table.
+    """
+
+    rules: Sequence[Tuple[int, int]] = ((1024, 12), (512, 22), (0, 28))
+
+    def fits(self, N: int, L_i: int, S: int) -> bool:
+        L = L_i + S
+        for threshold, max_n in self.rules:
+            if L > threshold:
+                return N <= max_n
+        return N <= self.rules[-1][1]
+
+
+def model_kv_delta(n_layers: int, n_kv_heads: int, head_dim: int,
+                   bytes_per_el: int = 2, n_model_shards: int = 1) -> float:
+    """Δ for a dense GQA transformer (2 = K and V)."""
+    return 2.0 * n_layers * n_kv_heads * head_dim * bytes_per_el / max(
+        min(n_model_shards, n_kv_heads), 1)
+
+
+# LLaMA2-13B: 40 layers, 40 heads, 128 head_dim, fp16
+LLAMA2_13B_DELTA = model_kv_delta(40, 40, 128, 2)
+# A100-80GB serving LLaMA2-13B (26GB weights fp16, ~4GB engine overhead)
+A100_80GB_AVAILABLE = 80e9 - 26e9 - 4e9

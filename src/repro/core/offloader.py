@@ -1,0 +1,53 @@
+"""Balanced load-oriented offloading (paper §4.5) + round-robin baseline."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.request import Batch
+
+
+class Offloader:
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self.loads: Dict[int, float] = {w: 0.0 for w in range(n_workers)}
+
+    def assign(self, batches: Sequence[Batch]) -> List[Tuple[int, Batch]]:
+        raise NotImplementedError
+
+    def on_batch_complete(self, worker: int, est_time: float) -> None:
+        """Eq. 11 follow-up: subtract the estimate on completion so the
+        estimation error never accumulates in the load."""
+        self.loads[worker] = max(0.0, self.loads[worker] - est_time)
+
+    def min_load(self) -> float:
+        return min(self.loads.values())
+
+
+class MaxMinOffloader(Offloader):
+    """Longest-estimated batch -> least-loaded worker (max-min policy)."""
+
+    def assign(self, batches: Sequence[Batch]) -> List[Tuple[int, Batch]]:
+        out = []
+        for b in sorted(batches, key=lambda b: -b.est_time):
+            w = min(self.loads, key=self.loads.get)
+            self.loads[w] += b.est_time  # Eq. 11
+            out.append((w, b))
+        return out
+
+
+class RoundRobinOffloader(Offloader):
+    """SLS/ILS baseline policy.  Loads are still tracked (for Eq. 12 and
+    metrics) but do not influence placement."""
+
+    def __init__(self, n_workers: int):
+        super().__init__(n_workers)
+        self._next = 0
+
+    def assign(self, batches: Sequence[Batch]) -> List[Tuple[int, Batch]]:
+        out = []
+        for b in batches:
+            w = self._next
+            self._next = (self._next + 1) % self.n_workers
+            self.loads[w] += b.est_time
+            out.append((w, b))
+        return out

@@ -1,0 +1,89 @@
+"""Scheduling strategies: the paper's SCLS and every baseline/ablation.
+
+Strategies are declarative configs consumed by the cluster runtime
+(``repro.cluster.simulator`` drives the same logic in virtual time that
+``repro.launch.serve`` drives against real JAX engines):
+
+  SLS  — per-request round-robin offload; workers run FCFS static batches of
+         fixed size with iteration limit = max_gen (paper baseline).
+  ILS  — per-request round-robin; continuous batching with a conservative
+         parallelism cap (DeepSpeed-FastGen-like baseline).
+  SO   — SLS + generation slicing (iteration limit = S, reschedule).
+  PM   — SO + sorted contiguous batching capped at the fixed batch size,
+         fetched centrally every Γ, round-robin offload.
+  AB   — PM with the cap lifted: full DP adaptive batching (Algorithm 1).
+  LB   — AB + max-min offloading (§4.5).
+  SCLS — LB + adaptive schedule interval (§4.6, Eq. 12).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StrategyConfig:
+    name: str
+    mode: str  # "perreq" | "central" | "continuous"
+    slice_len: int
+    max_gen: int = 1024
+    fixed_batch_size: Optional[int] = None  # worker-local FCFS batch size
+    use_dp: bool = False
+    dp_cap: Optional[int] = None  # PM: DP with batch-size cap
+    offload: str = "rr"  # "rr" | "maxmin"
+    adaptive_interval: bool = False
+    gamma: float = 3.0  # Γ: minimal schedule interval (s)
+    lam: float = 0.5  # λ in Eq. 12
+    # ILS conservative memory management
+    max_parallel: int = 12
+    max_cached_tokens: Optional[int] = None
+
+    @property
+    def slices(self) -> bool:
+        return self.slice_len < self.max_gen
+
+
+def make_strategy(name: str, slice_len: int = 128, max_gen: int = 1024,
+                  fixed_batch_size: int = 12, gamma: float = 3.0,
+                  lam: float = 0.5, max_parallel: int = 12) -> StrategyConfig:
+    name = name.lower()
+    base = dict(slice_len=slice_len, max_gen=max_gen, gamma=gamma, lam=lam)
+    if name == "sls":
+        return StrategyConfig("SLS", "perreq", slice_len=max_gen, max_gen=max_gen,
+                              fixed_batch_size=fixed_batch_size, gamma=gamma, lam=lam)
+    if name == "ils":
+        return StrategyConfig("ILS", "continuous", slice_len=max_gen, max_gen=max_gen,
+                              max_parallel=max_parallel, gamma=gamma, lam=lam)
+    if name == "so":
+        return StrategyConfig("SO", "perreq", fixed_batch_size=fixed_batch_size, **base)
+    if name == "pm":
+        return StrategyConfig("PM", "central", use_dp=True, dp_cap=fixed_batch_size,
+                              offload="rr", **base)
+    if name == "ab":
+        return StrategyConfig("AB", "central", use_dp=True, offload="rr", **base)
+    if name == "lb":
+        return StrategyConfig("LB", "central", use_dp=True, offload="maxmin", **base)
+    if name == "scls":
+        return StrategyConfig("SCLS", "central", use_dp=True, offload="maxmin",
+                              adaptive_interval=True, **base)
+    if name == "oracle":
+        # analysis upper bound (cf. PiA / S^3, paper §6 Related Work): a
+        # perfect generation-length predictor — requests are grouped by
+        # known remaining length (no slicing, no invalid tokens, no
+        # reschedules) and DP-batched within each length bucket.  SCLS's
+        # gap to this bound is the price of length-blindness.
+        return StrategyConfig("ORACLE", "oracle", use_dp=True,
+                              offload="maxmin", adaptive_interval=True, **base)
+    if name == "scls-cb":
+        # beyond-paper (§7 Discussion): slice-level scheduling ON TOP OF
+        # continuous batching — requests get S-token *leases* on a worker,
+        # join/exit at iteration boundaries under an exact token budget
+        # (slices make memory predictable, so no conservative cap), and
+        # leases are placed max-min by estimated slice time.
+        return StrategyConfig("SCLS-CB", "cont_scls", use_dp=False,
+                              offload="maxmin", adaptive_interval=True,
+                              max_parallel=1 << 30, **base)
+    raise ValueError(f"unknown strategy {name!r}")
+
+
+ALL_STRATEGIES = ("sls", "ils", "so", "pm", "ab", "lb", "scls", "scls-cb")

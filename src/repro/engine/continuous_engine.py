@@ -1,0 +1,146 @@
+"""Continuous-batching (iteration-level) engine — the ILS baseline, real JAX.
+
+Slot-based, DeepSpeed-FastGen-like semantics:
+  * a fixed number of slots (= the conservative parallelism cap the paper
+    criticizes);
+  * at every iteration boundary, finished requests exit and waiting requests
+    join (FCFS), each join paying its own prefill;
+  * no padding or invalid tokens are ever generated.
+
+Each slot owns a region of a shared KV cache; rows advance independently
+via per-row write slots (models.transformer.decode_step_rowslots).
+Dense-family models only (the baseline is evaluated on llama-family, as in
+the paper where FastGen serves LLaMA2).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.request import bucket_len
+from repro.engine.sampling import greedy
+from repro.models import transformer
+from repro.models.attention import KVCache, init_kv_cache
+from repro.models.registry import Model
+
+
+class _Slot:
+    __slots__ = ("req_idx", "cached", "base", "gen", "cur", "forced")
+
+    def __init__(self):
+        self.req_idx = -1
+        self.cached = 0
+        self.base = 0  # padded prefill width: decode writes go at base + gen
+        self.gen = 0
+        self.cur = 0
+        self.forced = 1 << 30
+
+
+class ContinuousEngine:
+    def __init__(self, model: Model, params, max_slots: int = 8,
+                 max_context: int = 2048, eos_id: int = 1, pad_id: int = 0,
+                 len_bucket: int = 16):
+        assert model.cfg.family in ("dense",), "ILS engine: dense family only"
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_slots = max_slots
+        self.W = max_context
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.len_bucket = len_bucket
+        cfg = model.cfg
+        self.cache = init_kv_cache(cfg.n_layers, max_slots, self.W,
+                                   cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
+        self._decode = jax.jit(
+            lambda p, c, t, qp, sl: transformer.decode_step_rowslots(
+                p, cfg, c, t, qp, sl))
+        self._prefill = jax.jit(
+            lambda p, t, l: transformer.prefill(p, cfg, t, l, self.W),
+            static_argnums=())
+
+    # ------------------------------------------------------------------
+    def _insert(self, row: int, prompt: np.ndarray):
+        """Returns (first_token, padded_prefill_width)."""
+        L = bucket_len(len(prompt), self.len_bucket)
+        toks = np.full((1, L), self.pad_id, np.int32)
+        toks[0, L - len(prompt):] = prompt
+        last_logits, single = self._prefill(self.params, jnp.asarray(toks),
+                                            jnp.asarray([len(prompt)], np.int32))
+        c = self.cache
+        self.cache = KVCache(
+            k=c.k.at[:, row].set(single.k[:, 0]),
+            v=c.v.at[:, row].set(single.v[:, 0]),
+            slot_pos=c.slot_pos.at[row].set(single.slot_pos[0]),
+            write_idx=c.write_idx,
+            lengths=c.lengths.at[row].set(len(prompt)),
+        )
+        return int(np.asarray(greedy(last_logits))[0]), L
+
+    # ------------------------------------------------------------------
+    def serve(self, prompts: Sequence[np.ndarray],
+              forced_gen_lens: Optional[Sequence[int]] = None,
+              max_gen: int = 1024, max_iters: int = 100000) -> "ContinuousResult":
+        """Serve all prompts to completion with continuous batching."""
+        n = len(prompts)
+        forced = list(forced_gen_lens) if forced_gen_lens is not None else [1 << 30] * n
+        waiting = list(range(n))
+        slots = [_Slot() for _ in range(self.max_slots)]
+        outputs: List[List[int]] = [[] for _ in range(n)]
+        join_order: List[int] = []
+        t0 = time.perf_counter()
+        iters = 0
+        while iters < max_iters:
+            iters += 1
+            # --- joins (FCFS, capped by slot count = conservative memory mgmt)
+            for s_i, s in enumerate(slots):
+                if s.req_idx < 0 and waiting:
+                    ridx = waiting.pop(0)
+                    first, base = self._insert(s_i, prompts[ridx])
+                    s.req_idx = ridx
+                    s.cached = len(prompts[ridx])
+                    s.base = base
+                    s.gen = 0
+                    s.cur = first
+                    s.forced = min(forced[ridx], max_gen)
+                    join_order.append(ridx)
+            active = [s for s in slots if s.req_idx >= 0]
+            if not active:
+                break
+            # --- one decode iteration over all slots (inactive rows masked)
+            cur = np.zeros((self.max_slots,), np.int32)
+            q_pos = np.zeros((self.max_slots,), np.int32)
+            wslots = np.zeros((self.max_slots,), np.int32)
+            for s_i, s in enumerate(slots):
+                if s.req_idx >= 0:
+                    cur[s_i] = s.cur
+                    q_pos[s_i] = s.cached + s.gen
+                    wslots[s_i] = (s.base + s.gen) % self.W
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(cur), jnp.asarray(q_pos),
+                                              jnp.asarray(wslots))
+            nxt = np.asarray(greedy(logits))
+            for s_i, s in enumerate(slots):
+                if s.req_idx < 0:
+                    continue
+                outputs[s.req_idx].append(int(s.cur))
+                s.gen += 1
+                finished = (s.cur == self.eos_id) or (s.gen >= s.forced)
+                if finished:
+                    s.req_idx = -1  # exit immediately; slot joins next iter
+                else:
+                    s.cur = int(nxt[s_i])
+        wall = time.perf_counter() - t0
+        return ContinuousResult(outputs, wall, iters, join_order)
+
+
+class ContinuousResult:
+    def __init__(self, outputs, wall_time, iterations, join_order):
+        self.outputs = outputs
+        self.wall_time = wall_time
+        self.iterations = iterations
+        self.join_order = join_order

@@ -1,0 +1,64 @@
+"""One-time engine profiling → serving-time estimator fitting (paper §4.2).
+
+Profiles T_prefill(N, L) and τ_decode(l, N) on the *real* JAX engine at a
+grid of batch sizes / lengths, then fits Eq. 3/4 by least squares — exactly
+the paper's methodology (scipy.curve_fit on a linear model ≡ lstsq).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimator import ServingTimeEstimator
+from repro.models.registry import Model
+
+
+def profile_engine(model: Model, params, batch_sizes: Sequence[int],
+                   input_lens: Sequence[int], n_decode_iters: int = 4,
+                   repeats: int = 2, seed: int = 0
+                   ) -> Tuple[List[tuple], List[tuple]]:
+    """Returns (prefill_samples, decode_samples) of (N, L, seconds)."""
+    rng = np.random.default_rng(seed)
+    cfg = model.cfg
+    prefill_samples, decode_samples = [], []
+
+    for N in batch_sizes:
+        for L in input_lens:
+            toks = rng.integers(2, cfg.vocab_size, size=(N, L)).astype(np.int32)
+            lengths = np.full((N,), L, np.int32)
+            batch = {"tokens": jnp.asarray(toks), "lengths": jnp.asarray(lengths)}
+            cache_window = L + n_decode_iters + 1
+
+            prefill_j = jax.jit(lambda p, b: model.prefill(p, b, cache_window))
+            decode_j = jax.jit(model.decode_step)
+            # warmup (compile)
+            last, cache = jax.block_until_ready(prefill_j(params, batch))
+            best_p = np.inf
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(prefill_j(params, batch))
+                best_p = min(best_p, time.perf_counter() - t0)
+            prefill_samples.append((N, L, best_p))
+
+            cur = jnp.argmax(last, -1).astype(jnp.int32)
+            jax.block_until_ready(decode_j(params, cache, cur, jnp.asarray(0, jnp.int32)))
+            best_d = np.inf
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for s in range(n_decode_iters):
+                    lg, cache = decode_j(params, cache, cur, jnp.asarray(s, jnp.int32))
+                jax.block_until_ready(lg)
+                best_d = min(best_d, (time.perf_counter() - t0) / n_decode_iters)
+            # cached length ~ L (+ a few decode steps)
+            decode_samples.append((N, L, best_d))
+    return prefill_samples, decode_samples
+
+
+def fit_estimator(model: Model, params, batch_sizes=(1, 2, 4), input_lens=(16, 32, 64),
+                  bucket: int = 1, **kw) -> Tuple[ServingTimeEstimator, float, float]:
+    pre, dec = profile_engine(model, params, batch_sizes, input_lens, **kw)
+    return ServingTimeEstimator.fit(pre, dec, bucket=bucket)

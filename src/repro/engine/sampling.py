@@ -1,0 +1,19 @@
+"""Token sampling for the serving engines."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key, logits: jnp.ndarray, temperature: float = 1.0,
+                       top_k: int = 0) -> jnp.ndarray:
+    """Categorical sampling with optional top-k truncation."""
+    logits = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,170 @@
+"""Static-batching inference engine (real JAX execution).
+
+Semantics follow the paper's §2.4 exactly:
+  * batched prompts are left-padded to the (bucketed) batch input length;
+  * the batch runs prefill once, then decodes for at most ``slice_len``
+    iterations (SCLS) or until every request has produced EOS — completed
+    requests keep generating *invalid* tokens while others finish, just like
+    HF/DS static batching (these are counted and discarded);
+  * serving ends early only when ALL requests are done (paper's
+    early-return case, measured in Fig. 14b/20b).
+
+Shape discipline (TPU adaptation, DESIGN.md §8): batch size is bucketed to
+the next power of two and input length to a multiple of ``len_bucket``, so
+each (N, L) bucket hits one compiled executable.  The KV cache is allocated
+at exactly ``L + slice_len`` slots — the paper's memory model Eq. (5).
+
+``forced_gen_lens`` emulates known EOS positions so controlled experiments
+can replay traces with ground-truth generation lengths while still doing
+every real FLOP; pass None to rely on the model's own EOS.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.request import bucket_len
+from repro.engine.sampling import greedy
+from repro.models.registry import Model
+
+
+def _pow2_bucket(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class StaticEngine:
+    def __init__(self, model: Model, params, eos_id: int = 1,
+                 pad_id: int = 0, len_bucket: int = 16,
+                 extra_inputs: Optional[Dict[str, np.ndarray]] = None):
+        self.model = model
+        self.params = params
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.len_bucket = len_bucket
+        self.extra_inputs = extra_inputs or {}
+        self._compiled: Dict[Tuple[int, int, int], object] = {}
+        self.compile_seconds = 0.0
+
+    # ------------------------------------------------------------------
+    def _serve_fn(self, slice_len: int):
+        model, eos = self.model, self.eos_id
+
+        @jax.jit
+        def serve(params, tokens, lengths, forced, extra):
+            B = tokens.shape[0]
+            batch = {"tokens": tokens, "lengths": lengths, **extra}
+            cache_window = tokens.shape[1] + slice_len
+            if model.cfg.family == "vlm" and "prefix_embeds" in extra:
+                cache_window += extra["prefix_embeds"].shape[1]
+            last_logits, cache = model.prefill(params, batch, cache_window)
+            tok0 = greedy(last_logits)
+
+            def cond(state):
+                step, _, _, done, _ = state
+                return (step < slice_len) & ~jnp.all(done)
+
+            def body(state):
+                step, cur, cache, done, out = state
+                out = jax.lax.dynamic_update_slice_in_dim(
+                    out, cur[:, None], step, axis=1)
+                gen_count = step + 1
+                done = done | (cur == eos) | (gen_count >= forced)
+                logits, cache = model.decode_step(params, cache, cur, step)
+                nxt = greedy(logits)
+                return step + 1, nxt, cache, done, out
+
+            out = jnp.full((B, slice_len), -1, jnp.int32)
+            done0 = jnp.zeros((B,), bool)
+            step, _, _, done, out = jax.lax.while_loop(
+                cond, body, (jnp.asarray(0, jnp.int32), tok0, cache, done0, out))
+            return out, step, done
+
+        return serve
+
+    def _get_compiled(self, slice_len: int):
+        key = slice_len
+        if key not in self._compiled:
+            self._compiled[key] = self._serve_fn(slice_len)
+        return self._compiled[key]
+
+    # ------------------------------------------------------------------
+    def serve_batch(self, prompts: Sequence[np.ndarray], slice_len: int,
+                    forced_gen_lens: Optional[Sequence[int]] = None,
+                    already_generated: Optional[Sequence[Sequence[int]]] = None,
+                    ) -> "ServeResult":
+        """Serve one static batch for at most ``slice_len`` iterations.
+
+        ``already_generated``: per-request previously generated tokens —
+        SCLS reschedule re-prefills prompt+generated (paper §3.3 overhead).
+        """
+        B_raw = len(prompts)
+        eff = []
+        for i, p in enumerate(prompts):
+            prev = list(already_generated[i]) if already_generated else []
+            eff.append(np.concatenate([np.asarray(p, np.int32),
+                                       np.asarray(prev, np.int32)])
+                       if prev else np.asarray(p, np.int32))
+        lengths = np.array([len(e) for e in eff], np.int32)
+        L = bucket_len(int(lengths.max()), self.len_bucket)
+        B = _pow2_bucket(B_raw)
+        tokens = np.full((B, L), self.pad_id, np.int32)
+        for i, e in enumerate(eff):
+            tokens[i, L - len(e):] = e  # left padding
+        lengths_p = np.concatenate([lengths, np.ones(B - B_raw, np.int32)])
+        if forced_gen_lens is None:
+            forced = np.full((B,), 1 << 30, np.int32)
+        else:
+            forced = np.concatenate([
+                np.asarray(forced_gen_lens, np.int32),
+                np.ones(B - B_raw, np.int32)])
+        extra = {k: self._pad_extra(v, B, B_raw) for k, v in self.extra_inputs.items()}
+
+        fn = self._get_compiled(slice_len)
+        t0 = time.perf_counter()
+        out, steps, done = fn(self.params, jnp.asarray(tokens),
+                              jnp.asarray(lengths_p), jnp.asarray(forced), extra)
+        out = np.asarray(jax.block_until_ready(out))
+        wall = time.perf_counter() - t0
+        steps = int(steps)
+        results = []
+        for i in range(B_raw):
+            toks = out[i, :steps]
+            if forced_gen_lens is not None:
+                n_valid = min(int(forced_gen_lens[i]), steps)
+            else:
+                eos_pos = np.where(toks == self.eos_id)[0]
+                n_valid = int(eos_pos[0]) + 1 if len(eos_pos) else steps
+            results.append(dict(tokens=toks[:n_valid].tolist(),
+                                n_valid=n_valid,
+                                finished=n_valid < steps or bool(done[i]),
+                                invalid=steps - n_valid,
+                                pad=L - int(lengths[i])))
+        return ServeResult(results=results, steps=steps, wall_time=wall,
+                           batch_input_len=L, batch_size=B_raw,
+                           early_return=steps < slice_len)
+
+    @staticmethod
+    def _pad_extra(v: np.ndarray, B: int, B_raw: int):
+        if v.shape[0] == B:
+            return jnp.asarray(v)
+        reps = np.concatenate([v, np.repeat(v[-1:], B - B_raw, axis=0)], axis=0)
+        return jnp.asarray(reps)
+
+
+class ServeResult:
+    def __init__(self, results: List[dict], steps: int, wall_time: float,
+                 batch_input_len: int, batch_size: int, early_return: bool):
+        self.results = results
+        self.steps = steps
+        self.wall_time = wall_time
+        self.batch_input_len = batch_input_len
+        self.batch_size = batch_size
+        self.early_return = early_return

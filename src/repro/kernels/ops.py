@@ -1,0 +1,89 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+``impl`` selects the backend:
+  * "xla"       — the pure-jnp reference (default on CPU; also the oracle)
+  * "pallas"    — the TPU kernel (compiled on TPU, interpret-executed on CPU)
+
+``set_default_impl`` flips the global default (the engines and models call
+through these wrappers, so one switch moves the whole serving stack onto
+the kernels).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_prefill import flash_prefill as _prefill_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+_DEFAULT_IMPL = "xla"
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "impl", "block_q", "block_k"))
+def prefill_attention(q, k, v, positions, window: Optional[int] = None,
+                      impl: Optional[str] = None, block_q: int = 128,
+                      block_k: int = 128):
+    """Causal/pad-masked GQA prefill attention. q (B,T,Hq,D) -> (B,T,Hq,D)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        T = q.shape[1]
+        bq = min(block_q, T)
+        bk = min(block_k, T)
+        while T % bq:
+            bq //= 2
+        while T % bk:
+            bk //= 2
+        return _prefill_pallas(q, k, v, positions, window=window,
+                               block_q=bq, block_k=bk, interpret=_interpret())
+    return ref.flash_prefill_ref(q, k, v, positions, window=window)
+
+
+@partial(jax.jit, static_argnames=("window", "impl", "block_w"))
+def decode_gqa_attention(q, k_cache, v_cache, slot_pos, q_pos,
+                         window: Optional[int] = None,
+                         impl: Optional[str] = None, block_w: int = 512):
+    """Single-token GQA decode attention. q (B,Hq,D) -> (B,Hq,D)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        W = k_cache.shape[1]
+        bw = min(block_w, W)
+        while W % bw:
+            bw //= 2
+        return _decode_pallas(q, k_cache, v_cache, slot_pos, q_pos,
+                              window=window, block_w=bw, interpret=_interpret())
+    return ref.decode_attention_ref(q, k_cache, v_cache, slot_pos, q_pos,
+                                    window=window)
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_chunked_scan(x, dt, A, B, C, chunk: int = 128,
+                     impl: Optional[str] = None):
+    """Mamba-2 SSD scan. x (B,T,H,P); B/C (B,T,G,N) -> (y, final_state)."""
+    impl = impl or _DEFAULT_IMPL
+    H = x.shape[2]
+    G = B.shape[2]
+    if impl == "pallas":
+        Bh = jnp.broadcast_to(B[:, :, :1], B.shape[:2] + (H, B.shape[-1]))             if G == 1 else jnp.repeat(B, H // G, axis=2)
+        Ch = jnp.broadcast_to(C[:, :, :1], C.shape[:2] + (H, C.shape[-1]))             if G == 1 else jnp.repeat(C, H // G, axis=2)
+        return _ssd_pallas(x, dt, A, Bh, Ch, chunk, interpret=_interpret())
+    from repro.models.mamba2 import _ssd_chunked
+    return _ssd_chunked(x, dt, A, B, C, chunk)

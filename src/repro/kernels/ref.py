@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      positions: jnp.ndarray, window: Optional[int] = None,
+                      scale: Optional[float] = None) -> jnp.ndarray:
+    """Causal + left-pad-masked GQA attention.
+
+    q (B,T,Hq,D); k/v (B,T,Hkv,D); positions (B,T) with pads < 0.
+    """
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    pq = positions[:, :, None]
+    pk = positions[:, None, :]
+    mask = (pk >= 0) & (pk <= pq)
+    if window is not None:
+        mask = mask & (pq - pk < window)
+    mask = mask | jnp.eye(T, dtype=bool)[None]
+    qr = q.reshape(B, T, Hkv, G, D)
+    s = jnp.einsum("bthgd,bshd->bhgts", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgts,bshd->bthgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, T, Hq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, slot_pos: jnp.ndarray,
+                         q_pos: jnp.ndarray, window: Optional[int] = None,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token GQA decode over a (ring) KV cache.
+
+    q (B,Hq,D); k/v_cache (B,W,Hkv,D); slot_pos (B,W) (-1 empty);
+    q_pos (B,).  Returns (B,Hq,D).
+    """
+    B, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    mask = (slot_pos >= 0) & (slot_pos <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (q_pos[:, None] - slot_pos < window)
+    qr = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bwhd->bhgw", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgw,bwhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
+lowers AND compiles on the production mesh, and extract the roofline terms.
+
+The two lines above run before any other import (jax locks the device count
+on first init); 512 placeholder host devices back the (2,16,16) multi-pod
+mesh.  Nothing is ever allocated: inputs are ShapeDtypeStructs and we stop
+at .lower().compile() + analyses.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out dryrun_results]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.shapes import InputShape, effective_window, token_specs
+from repro.launch import sharding as shr
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models.common import ModelConfig
+from repro.models.registry import get_model
+from repro.optim.adamw import AdamWConfig, init_adamw
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+SLICE_LEN = 128  # SCLS slice length: prefill caches are L_i + S (Eq. 5)
+
+
+def _key_spec():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def build_lowered(arch: str, shape_name: str, mesh, slice_len: int = SLICE_LEN,
+                  cfg_override: Optional[ModelConfig] = None,
+                  fsdp: bool = True, fsdp_min_bytes: int = 0,
+                  seq_shard: bool = False):
+    """Lower the right step for (arch, shape) on mesh. Returns (lowered, meta).
+
+    Perf levers (EXPERIMENTS.md §Perf):
+      fsdp=False       — TP-only weights (serving: no per-step param gathers)
+      fsdp_min_bytes   — leave small leaves replicated (small models)
+      seq_shard        — Megatron-SP: residual stream sequence-sharded over
+                         the "model" axis between layers (train shapes)
+    """
+    from repro.models.common import set_activation_sharding
+    from jax.sharding import PartitionSpec as P
+
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or get_config(arch)
+    if shape.kind == "train":
+        cfg = cfg.replace(remat=True)
+    window = effective_window(cfg, shape)
+    model = get_model(cfg)
+
+    if seq_shard and shape.seq_len % mesh.devices.shape[-1] == 0:
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        set_activation_sharding(P(dp, "model", None))
+    else:
+        set_activation_sharding(None)
+
+    params_t = jax.eval_shape(model.init, _key_spec())
+    params_ps = shr.tree_pspecs(params_t, mesh, cfg, fsdp=fsdp,
+                                fsdp_min_bytes=fsdp_min_bytes)
+    params_ns = shr.named(params_ps, mesh)
+
+    batch_t = token_specs(cfg, shape)
+    batch_ps = shr.batch_pspec(batch_t, mesh, shape.global_batch)
+    batch_ns = shr.named(batch_ps, mesh)
+
+    meta: Dict[str, Any] = dict(arch=arch, shape=shape_name, kind=shape.kind,
+                                window=window, fsdp=fsdp, seq_shard=seq_shard,
+                                fsdp_min_bytes=fsdp_min_bytes,
+                                mesh=dict(zip(mesh.axis_names, mesh.devices.shape)))
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_t = jax.eval_shape(init_adamw, params_t)
+        opt_ps = shr.tree_pspecs(opt_t, mesh, cfg, fsdp=fsdp,
+                                 fsdp_min_bytes=fsdp_min_bytes)
+        opt_ns = shr.named(opt_ps, mesh)
+        step = make_train_step(model, opt_cfg)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(params_ns, opt_ns, batch_ns),
+                out_shardings=(params_ns, opt_ns, None),
+                donate_argnums=(0, 1),
+            ).lower(params_t, opt_t, batch_t)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        cache_window = shape.seq_len + slice_len  # Eq. (5): L_i + S
+        step = make_prefill_step(model, cache_window, window=window)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(params_ns, batch_ns),
+            ).lower(params_t, batch_t)
+        return lowered, meta
+
+    # decode: one new token against a cache of seq_len
+    if cfg.family in ("ssm", "hybrid"):
+        cache_window = shape.seq_len  # constant state / ring handles it
+    else:
+        cache_window = shape.seq_len if window is None else min(shape.seq_len, window)
+    prefill_T = cache_window
+    pre_batch_t = dict(token_specs(cfg, shape))
+    pre_batch_t["tokens"] = jax.ShapeDtypeStruct(
+        (shape.global_batch, prefill_T), jnp.int32)
+    cache_t = jax.eval_shape(
+        lambda p, b: model.prefill(p, b, cache_window, window=window)[1],
+        params_t, pre_batch_t)
+    cache_ps = shr.cache_pspec(cache_t, mesh, cfg, shape.global_batch)
+    cache_ns = shr.named(cache_ps, mesh)
+    tok_t = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tok_ps = shr.batch_pspec({"t": tok_t}, mesh, shape.global_batch)["t"]
+    step_t = jax.ShapeDtypeStruct((), jnp.int32)
+    decode = make_decode_step(model, window=window)
+    with mesh:
+        lowered = jax.jit(
+            decode,
+            in_shardings=(params_ns, cache_ns, shr.named(tok_ps, mesh), None),
+            out_shardings=(None, cache_ns),
+            donate_argnums=(1,),
+        ).lower(params_t, cache_t, tok_t, step_t)
+    return lowered, meta
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N_active·D (training) or 2·N_active·D (single forward token batch)."""
+    import math
+    model = get_model(cfg)
+    params_t = jax.eval_shape(model.init, _key_spec())
+    n_params = sum(math.prod(x.shape) for x in jax.tree.leaves(params_t))
+    n_active = n_params
+    if cfg.n_experts:  # only top_k of n_experts experts run per token
+        expert_p = 3 * cfg.d_model * cfg.d_ff_expert * (cfg.n_layers - cfg.first_dense_layers)
+        n_active = n_params - expert_p * cfg.n_experts + expert_p * cfg.top_k
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * 1 * shape.global_batch  # decode: 1 token/request
+
+
+def analyse(lowered, compiled, meta, n_chips: int) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    coll_bytes = sum(b for _, b in colls.values())
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    cfg = get_config(meta["arch"])
+    shape = SHAPES[meta["shape"]]
+    mf = model_flops(cfg, shape)
+    terms = dict(
+        compute_s=flops / PEAK_FLOPS,           # per-chip module flops
+        memory_s=bytes_acc / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+    )
+    dominant = max(terms, key=terms.get)
+    return dict(
+        **meta,
+        flops_per_device=flops,
+        bytes_per_device=bytes_acc,
+        collective_bytes_per_device=coll_bytes,
+        collectives={k: dict(count=c, bytes=b) for k, (c, b) in colls.items()},
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+        ),
+        roofline=terms,
+        dominant=dominant,
+        model_flops_total=mf,
+        model_flops_per_device=mf / n_chips,
+        useful_flop_ratio=(mf / n_chips) / flops if flops else None,
+    )
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            slice_len: int = SLICE_LEN, variant: str = "baseline",
+            **build_kw) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    lowered, meta = build_lowered(arch, shape_name, mesh, slice_len, **build_kw)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    rec = analyse(lowered, compiled, meta, n_chips)
+    rec.update(lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+               n_chips=n_chips, multi_pod=multi_pod, status="ok",
+               variant=variant)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        vtag = "" if variant == "baseline" else f"_{variant}"
+        tag = (f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}{vtag}"
+               ).replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="dryrun_results")
+    ap.add_argument("--slice-len", type=int, default=SLICE_LEN)
+    ap.add_argument("--variant", default="baseline",
+                    help="perf variant tag for the output file")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fsdp-min-mb", type=float, default=0.0)
+    ap.add_argument("--seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    combos = ([(a, s) for a in ARCHS for s in SHAPES] if args.all
+              else [(args.arch, args.shape)])
+    ok = fail = 0
+    for arch, shape in combos:
+        try:
+            rec = run_one(arch, shape, args.multi_pod, args.out, args.slice_len,
+                          variant=args.variant, fsdp=not args.no_fsdp,
+                          fsdp_min_bytes=int(args.fsdp_min_mb * 1e6),
+                          seq_shard=args.seq_shard)
+            r = rec["roofline"]
+            print(f"OK   {arch:24s} {shape:12s} lower={rec['lower_s']:6.1f}s "
+                  f"compile={rec['compile_s']:6.1f}s dom={rec['dominant']:12s} "
+                  f"comp={r['compute_s']:.3e} mem={r['memory_s']:.3e} "
+                  f"coll={r['collective_s']:.3e}", flush=True)
+            ok += 1
+        except Exception as e:
+            print(f"FAIL {arch:24s} {shape:12s} {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+            fail += 1
+    print(f"\n{ok} ok, {fail} failed")
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Parse compiled HLO text for collective traffic (roofline collective term).
+
+cost_analysis() gives FLOPs and bytes but not collective bytes, so we sum
+the output-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute in the post-SPMD module (per-device shapes,
+which is what per-chip link traffic needs).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %x = bf16[2,16,1024]{2,1,0} all-gather(...)
+#        %y = (f32[128]{0}, f32[128]{0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shapes: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Tuple[int, int]]:
+    """-> {kind: (op_count, total_output_bytes)} (per device)."""
+    out: Dict[str, Tuple[int, int]] = {k: (0, 0) for k in COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue  # -start already counted with the same output shape
+        kind = m.group("kind")
+        b = _shape_bytes(m.group("shapes"))
+        c, t = out[kind]
+        out[kind] = (c + 1, t + b)
+    return {k: v for k, v in out.items() if v[0] > 0}
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(b for _, b in parse_collectives(hlo_text).values())
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

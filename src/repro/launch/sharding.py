@@ -1,0 +1,166 @@
+"""Sharding rules: parameter, optimizer, batch, and cache PartitionSpecs.
+
+Strategy (DESIGN.md §6): 2-D FSDP x TP —
+  * weights: tensor-parallel on "model" (output dim for up-projections,
+    input dim for down-projections, expert axis for MoE when divisible),
+    plus FSDP on "data" over the first other divisible dim (so 22B-scale
+    params and fp32 optimizer moments fit per device);
+  * activations / caches: batch on ("pod","data"); KV heads on "model"
+    when the head count divides, else replicated (MQA);
+  * everything falls back to replication when sizes don't divide — the
+    rules are pure shape arithmetic, so every assigned arch shards without
+    per-arch tables.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+# parameter-name classes: which dim gets the "model" axis
+_COL_PARALLEL = ("wq", "wk", "wv", "gate", "up", "k_up", "v_up", "w_in",
+                 "w_gate", "lru_a", "lru_x", "in_proj", "wq_b")
+_ROW_PARALLEL = ("wo", "down", "out_proj", "w_out")
+_VOCAB_PARALLEL = ("table", "unembed")
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.devices.shape[mesh.axis_names.index(name)] if name in mesh.axis_names else 1
+
+
+def _fsdp_extend(spec: list, shape: Tuple[int, ...], mesh, skip: set) -> list:
+    """Add a "data" (FSDP) axis on the first divisible unsharded dim."""
+    d = _axis_size(mesh, "data")
+    if d == 1:
+        return spec
+    for i, s in enumerate(shape):
+        if i in skip or spec[i] is not None:
+            continue
+        if s % d == 0 and s >= d:
+            spec[i] = "data"
+            return spec
+    return spec
+
+
+def param_pspec(path: str, leaf, mesh, cfg: ModelConfig,
+                fsdp: bool = True, fsdp_min_bytes: int = 0) -> P:
+    """PartitionSpec for one parameter leaf, from its path and shape.
+
+    ``fsdp=False`` keeps weights TP-only (replicated over "data") — the
+    right choice for *serving*, where there is no optimizer state and the
+    per-step param all-gathers would dominate the collective roofline term
+    (EXPERIMENTS.md §Perf iteration 3).  ``fsdp_min_bytes``: leave leaves
+    smaller than this replicated (tiny models pay more in all-gather
+    latency than they save in HBM — §Perf iteration 2)."""
+    shape = leaf.shape
+    m = _axis_size(mesh, "model")
+    spec: list = [None] * len(shape)
+    parts = path.split("/")
+    name = parts[-2] if parts[-1] in ("w", "b") else parts[-1]
+    is_bias = parts[-1] == "b"
+    is_expert = "experts" in parts
+
+    if len(shape) == 0:
+        return P()
+    if name in _VOCAB_PARALLEL or (name == "unembed" and not is_bias):
+        # embed table (V, d) / unembed w (d, V): shard the vocab dim
+        vdim = 0 if name == "table" else len(shape) - 1
+        if shape[vdim] % m == 0:
+            spec[vdim] = "model"
+    elif is_expert and cfg.n_experts and cfg.n_experts % m == 0:
+        # expert-parallel: the expert axis (first non-layer dim)
+        edim = 1 if len(shape) >= 3 else 0  # (L, E, ...) stacked under scan
+        if shape[edim] == cfg.n_experts:
+            spec[edim] = "model"
+    elif any(name == n for n in _COL_PARALLEL):
+        d = len(shape) - 1
+        if shape[d] % m == 0 and shape[d] >= m:
+            spec[d] = "model"
+    elif any(name == n for n in _ROW_PARALLEL) and not is_bias:
+        d = len(shape) - 2
+        if d >= 0 and shape[d] % m == 0 and shape[d] >= m:
+            spec[d] = "model"
+    # FSDP over "data" on another dim (weights >= 2D only; keep scalars/
+    # norms replicated)
+    import math
+    nbytes = math.prod(shape) * getattr(leaf, "dtype", jnp.float32).itemsize \
+        if hasattr(leaf, "dtype") else math.prod(shape) * 4
+    if len(shape) >= 2 and fsdp and nbytes >= fsdp_min_bytes:
+        spec = _fsdp_extend(spec, shape, mesh, skip=set())
+    return P(*spec)
+
+
+def tree_pspecs(tree, mesh, cfg: ModelConfig, prefix: str = "",
+                fsdp: bool = True, fsdp_min_bytes: int = 0):
+    """Map param_pspec over a pytree of arrays/ShapeDtypeStructs."""
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}{k}/") for k, v in node.items()}
+        if hasattr(node, "_fields"):
+            return type(node)(*(walk(getattr(node, f), f"{path}{f}/")
+                                for f in node._fields))
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, f"{path}{i}/") for i, v in enumerate(node))
+        return param_pspec(path, node, mesh, cfg, fsdp=fsdp,
+                           fsdp_min_bytes=fsdp_min_bytes)
+
+    return walk(tree, prefix)
+
+
+# ---------------------------------------------------------------------------
+# batch / activation shardings
+# ---------------------------------------------------------------------------
+def batch_pspec(batch_template: Dict[str, Any], mesh, global_batch: int
+                ) -> Dict[str, P]:
+    """Shard the leading batch dim over ("pod","data") when divisible."""
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    use_dp = tuple(dp) if global_batch % max(dp_size, 1) == 0 and dp_size > 1 else None
+
+    out = {}
+    for k, v in batch_template.items():
+        nd = len(v.shape)
+        if nd == 0:
+            out[k] = P()
+        elif use_dp is None:
+            out[k] = P(*([None] * nd))
+        else:
+            out[k] = P(use_dp, *([None] * (nd - 1)))
+    return out
+
+
+def cache_pspec(cache_template, mesh, cfg: ModelConfig, global_batch: int):
+    """PartitionSpecs for a serving cache pytree (KVCache/MLACache/Mamba/RG/
+    MoE/EncDec).  Heuristic per leaf: shard the dim equal to the batch size
+    over dp axes; shard a dim equal to n_kv_heads over "model" if it
+    divides."""
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    m = _axis_size(mesh, "model")
+    use_dp = tuple(dp) if global_batch % max(dp_size, 1) == 0 and dp_size > 1 else None
+
+    def leaf_spec(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        batch_done = False
+        for i, s in enumerate(shape):
+            if not batch_done and s == global_batch and use_dp is not None:
+                spec[i] = use_dp
+                batch_done = True
+            elif (s == cfg.n_kv_heads and cfg.n_kv_heads % m == 0
+                  and cfg.n_kv_heads >= m and i >= len(shape) - 2):
+                spec[i] = "model"
+        return P(*spec)
+
+    return jax.tree.map(leaf_spec, cache_template)
+
+
+def named(tree_pspec, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspec,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,34 @@
+"""train_step / serve_step builders shared by the trainer, server, dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, Any]):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_opt = adamw_update(opt_cfg, grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_prefill_step(model: Model, cache_window: int,
+                      window: Optional[int] = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_window, window=window)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, window: Optional[int] = None):
+    def decode_step(params, cache, tokens, step):
+        return model.decode_step(params, cache, tokens, step, window=window)
+
+    return decode_step

@@ -1,0 +1,79 @@
+"""Training launcher (the serving paper's substrate: every assigned arch is
+trainable end-to-end, and the train_4k dry-run shape lowers this step).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+      --steps 200 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import load_checkpoint, save_checkpoint
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import SyntheticCorpus, TokenBatcher
+from repro.launch.steps import make_train_step
+from repro.models.registry import get_model
+from repro.optim.adamw import AdamWConfig, init_adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"[train] {args.arch}: {n_params/1e6:.2f}M params, "
+          f"B={args.batch} T={args.seq}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps)
+    opt = init_adamw(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed)
+    data = TokenBatcher(corpus, args.batch, args.seq)
+    rng = np.random.default_rng(args.seed)
+
+    losses = []
+    t0 = time.time()
+    for step, np_batch in zip(range(args.steps), data):
+        batch = {"tokens": jnp.asarray(np_batch["tokens"])}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jnp.asarray(
+                rng.standard_normal((args.batch, 16, cfg.d_model)), cfg.dtype)
+        if cfg.family == "vlm":
+            batch["prefix_embeds"] = jnp.asarray(
+                rng.standard_normal((args.batch, cfg.n_prefix_tokens, cfg.d_model)),
+                cfg.dtype)
+        params, opt, loss = step_fn(params, opt, batch)
+        losses.append(float(loss))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            rate = (step + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {step:5d}  loss {float(loss):.4f}  tok/s {rate:,.0f}")
+
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"[train] loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt, step=args.steps)
+        print(f"[train] checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

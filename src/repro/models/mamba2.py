@@ -1,0 +1,258 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in raw JAX.
+
+The temporal mixer is the SSD chunked algorithm: quadratic attention-like
+computation *within* chunks of ``Q = cfg.ssm_chunk`` tokens plus a cheap
+inter-chunk recurrence over (H, P, N) states — O(T·Q) instead of O(T²),
+and the exact recurrence used token-by-token at decode time.
+
+Left-padding convention: pad tokens contribute nothing (inputs and dt are
+masked to zero, giving an identity state transition), so the SSM state after
+prefill is exactly the state after the real tokens.
+
+Decode cache = per-layer (conv ring state, SSD state) — constant memory,
+which is why long_500k runs natively for this arch (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, Params, dense_apply, dense_param,
+                                 embed_apply, init_embed, init_rms, rms_norm,
+                                 scan_layers, stack_layers, unembed_apply,
+                                 normal_init)
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray  # (L, B, W-1, conv_dim) — last W-1 conv inputs
+    state: jnp.ndarray  # (L, B, H, P, N) SSD state
+    lengths: jnp.ndarray  # (B,) int32
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_d_inner
+    H, P, N, G = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_n_groups
+    conv_dim = d_in + 2 * G * N
+    return d_in, H, P, N, G, conv_dim
+
+
+def init_mixer(key, cfg: ModelConfig) -> Params:
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    zxbcdt = 2 * d_in + 2 * G * N + H
+    return {
+        "in_proj": dense_param(k1, cfg.d_model, zxbcdt, cfg.dtype),
+        "conv_w": normal_init(k2, (cfg.ssm_conv_width, conv_dim), cfg.dtype, 0.2),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1 at init
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": init_rms(d_in, cfg.dtype),
+        "out_proj": dense_param(k3, d_in, cfg.d_model, cfg.dtype),
+    }
+
+
+def _split_zxbcdt(p: Params, u: jnp.ndarray, cfg: ModelConfig):
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    zxbcdt = dense_apply(p["in_proj"], u)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(p: Params, xBC: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width W. xBC (B,T,C); pads already zeroed."""
+    W = p["conv_w"].shape[0]
+    x = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(x[:, i:i + xBC.shape[1], :] * p["conv_w"][i][None, None]
+              for i in range(W))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _ssd_chunked(x, dt, A, B, C, Q: int, init_state=None):
+    """Chunked SSD scan.
+
+    x (B,T,H,P); dt (B,T,H) >=0 (0 at pads); A (H,) negative; B,C (B,T,G,N).
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).  T % Q must be 0.
+    """
+    Bsz, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    nc = T // Q
+    rep = H // G
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = B.reshape(Bsz, nc, Q, G, N)
+    Cc = C.reshape(Bsz, nc, Q, G, N)
+
+    log_a = dtc * A  # (B,nc,Q,H), <= 0
+    cum = jnp.cumsum(log_a, axis=2)  # inclusive cumsum within chunk
+    # intra-chunk (attention-like): y[t] += sum_{s<=t} (C_t.B_s) e^{cum_t-cum_s} dt_s x_s
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (B,nc,G,Q,Q)
+    CB = jnp.repeat(CB, rep, axis=2)  # (B,nc,H,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H) t,s
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    w = CB * jnp.transpose(decay, (0, 1, 4, 2, 3)) * causal[None, None, None]
+    w = w * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # dt_s
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w, xc)
+    # chunk states: S_c = sum_s e^{cum_end - cum_s} dt_s B_s (x) x_s
+    seg = jnp.exp(cum[:, :, -1:, :] - cum) * dtc  # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", seg, Bh, xc)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), S.dtype)
+
+    def step(h, xs):
+        dec, s = xs  # dec (B,H), s (B,H,P,N)
+        h_new = h * dec[:, :, None, None] + s
+        return h_new, h  # emit state *entering* the chunk
+
+    final, h_in = jax.lax.scan(step, init_state,
+                               (chunk_decay.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+    # inter-chunk contribution: y[t] += C_t . (e^{cum_t} * h_in)
+    Ch = jnp.repeat(Cc, rep, axis=3)  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Ch, h_in) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, final
+
+
+def mixer_forward(p: Params, u: jnp.ndarray, valid: jnp.ndarray, cfg: ModelConfig,
+                  init_state: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """u (B,T,d_model); valid (B,T) bool. Returns (out, final_state, conv_tail)."""
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    B_, T, _ = u.shape
+    z, xBC, dt = _split_zxbcdt(p, u, cfg)
+    xBC = jnp.where(valid[..., None], xBC, 0.0)
+    xBC_conv = _causal_conv(p, xBC, valid)
+    x, Bmat, Cmat = jnp.split(xBC_conv, [d_in, d_in + G * N], axis=-1)
+    x = x.reshape(B_, T, H, P)
+    Bmat = Bmat.reshape(B_, T, G, N)
+    Cmat = Cmat.reshape(B_, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = jnp.where(valid[..., None], dt, 0.0)  # identity transition at pads
+    A = -jnp.exp(p["A_log"])
+    y, final = _ssd_chunked(x.astype(jnp.float32), dt, A,
+                            Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                            cfg.ssm_chunk, init_state)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, T, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    conv_tail = xBC[:, -(cfg.ssm_conv_width - 1):, :]  # last W-1 raw conv inputs
+    return dense_apply(p["out_proj"], y), final, conv_tail
+
+
+def mixer_decode(p: Params, u: jnp.ndarray, conv_state: jnp.ndarray,
+                 ssm_state: jnp.ndarray, cfg: ModelConfig):
+    """One-token recurrence. u (B,1,d); conv_state (B,W-1,conv_dim);
+    ssm_state (B,H,P,N)."""
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    B_ = u.shape[0]
+    z, xBC, dt = _split_zxbcdt(p, u, cfg)
+    xBC = xBC[:, 0]  # (B, conv_dim)
+    window = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # (B,W,conv)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    x, Bmat, Cmat = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+    x = x.reshape(B_, H, P).astype(jnp.float32)
+    Bmat = jnp.repeat(Bmat.reshape(B_, G, N), H // G, axis=1).astype(jnp.float32)
+    Cmat = jnp.repeat(Cmat.reshape(B_, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # (B,H)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bmat, x)
+    new_state = ssm_state * a[:, :, None, None] + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Cmat, new_state) + x * p["D"][None, :, None]
+    y = y.reshape(B_, 1, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return dense_apply(p["out_proj"], y), window[:, 1:], new_state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig) -> Params:
+    km = jax.random.split(key, 1)[0]
+    return {"mixer": init_mixer(km, cfg), "ln": init_rms(cfg.d_model, cfg.dtype)}
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ke, kl = jax.random.split(key)
+    return {
+        "embed": init_embed(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "layers": stack_layers(lambda k: init_block(k, cfg), kl, cfg.n_layers),
+        "ln_f": init_rms(cfg.d_model, cfg.dtype),
+    }
+
+
+def _pad_to_chunk(h, valid, Q):
+    T = h.shape[1]
+    lead = (-T) % Q
+    if lead:
+        h = jnp.pad(h, ((0, 0), (lead, 0), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (lead, 0)))
+    return h, valid, lead
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    B, T = tokens.shape
+    if valid is None:
+        valid = jnp.ones((B, T), bool)
+    h = embed_apply(params["embed"], tokens, cfg)
+    h = jnp.where(valid[..., None], h, 0.0)
+    h, valid_p, lead = _pad_to_chunk(h, valid, cfg.ssm_chunk)
+
+    def body(carry, layer):
+        o, _, _ = mixer_forward(layer["mixer"],
+                                rms_norm(carry, layer["ln"], cfg.norm_eps),
+                                valid_p, cfg)
+        return carry + o, None
+
+    h, _ = scan_layers(body, h, params["layers"], remat=cfg.remat)
+    h = h[:, lead:]
+    return unembed_apply(params["embed"], rms_norm(h, params["ln_f"], cfg.norm_eps))
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            lengths: jnp.ndarray, cache_window: int = 0,
+            ) -> Tuple[jnp.ndarray, MambaCache]:
+    """cache_window is ignored (constant-size state) — kept for API parity."""
+    B, T = tokens.shape
+    idx = jnp.arange(T)[None]
+    valid = idx >= (T - lengths[:, None])
+    h = embed_apply(params["embed"], tokens, cfg)
+    h = jnp.where(valid[..., None], h, 0.0)
+    h, valid_p, lead = _pad_to_chunk(h, valid, cfg.ssm_chunk)
+
+    def body(carry, layer):
+        o, st, conv_tail = mixer_forward(layer["mixer"],
+                                         rms_norm(carry, layer["ln"], cfg.norm_eps),
+                                         valid_p, cfg)
+        return carry + o, (st, conv_tail)
+
+    h, (states, conv_tails) = scan_layers(body, h, params["layers"])
+    logits = unembed_apply(params["embed"],
+                           rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps))[:, 0]
+    cache = MambaCache(conv=conv_tails, state=states, lengths=lengths.astype(jnp.int32))
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: MambaCache,
+                tokens: jnp.ndarray, step: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, MambaCache]:
+    h = embed_apply(params["embed"], tokens[:, None], cfg)
+
+    def body(carry, layer, conv, state):
+        o, conv, state = mixer_decode(layer["mixer"],
+                                      rms_norm(carry, layer["ln"], cfg.norm_eps),
+                                      conv, state, cfg)
+        return carry + o, (conv, state)
+
+    h, (convs, states) = scan_layers(body, h, params["layers"], cache.conv, cache.state)
+    logits = unembed_apply(params["embed"],
+                           rms_norm(h, params["ln_f"], cfg.norm_eps))[:, 0]
+    return logits, cache._replace(conv=convs, state=states)

@@ -1,0 +1,296 @@
+"""Mixture-of-Experts layers + MoE decoder models.
+
+Covers both assigned MoE archs:
+  * mixtral-8x22b  — GQA attention (SWA 4096) + 8 routed experts, top-2
+  * deepseek-v2-lite — MLA attention + (2 shared + 64 routed, top-6) experts,
+    first layer dense (arXiv:2405.04434)
+
+Routing uses the MaxText/Mesh-TF style *dropping* dispatch: tokens are
+reshaped into groups, and within each group a capacity-bounded one-hot
+dispatch/combine einsum moves tokens to experts.  This is fully static-shaped
+(TPU-friendly) and lets the compiler lay down all-to-all / all-gather
+collectives when experts are sharded over the "model" mesh axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla
+from repro.models.attention import KVCache
+from repro.models.common import (ModelConfig, Params, dense_apply, dense_param,
+                                 embed_apply, init_embed, init_mlp, init_rms,
+                                 mlp_apply, normal_init, rms_norm, scan_layers,
+                                 stack_layers, unembed_apply)
+
+MOE_GROUP = 1024  # dispatch group size (tokens); decode uses one group
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+def init_moe_layer(key, cfg: ModelConfig) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    E, dff = cfg.n_experts, cfg.d_ff_expert
+
+    def one_expert(k):
+        return init_mlp(k, cfg.d_model, dff, cfg.dtype)
+
+    p = {
+        "router": normal_init(kr, (cfg.d_model, E), jnp.float32),
+        "experts": stack_layers(one_expert, ke, E),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks, cfg.d_model, dff * cfg.n_shared_experts, cfg.dtype)
+    return p
+
+
+def _dispatch(probs: jnp.ndarray, top_k: int, capacity: int):
+    """probs (g,E) -> (dispatch (g,E,C) bool-ish, combine (g,E,C) float)."""
+    g, E = probs.shape
+    top_p, top_i = jax.lax.top_k(probs, top_k)  # (g,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (g,K,E)
+    # priority: earlier tokens first, k-slots of one token in order
+    flat = onehot.reshape(g * top_k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat  # (gK,E) position within expert
+    keep = (pos < capacity) * flat
+    disp_slot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32) * keep[..., None]
+    disp = disp_slot.reshape(g, top_k, E, capacity)
+    dispatch = disp.sum(1)  # (g,E,C)
+    combine = jnp.einsum("gkec,gk->gec", disp, top_p)
+    return dispatch, combine
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,T,d) -> (y (B,T,d), aux_loss scalar)."""
+    B, T, d = x.shape
+    g_total = B * T
+    xf = x.reshape(g_total, d)
+    group = min(MOE_GROUP, g_total)
+    pad = (-g_total) % group
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    n_groups = xf.shape[0] // group
+    xg = xf.reshape(n_groups, group, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])  # (n,gr,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = cfg.n_experts
+    cap = max(1, int(group * cfg.top_k * cfg.capacity_factor / E))
+
+    def one_group(args):
+        xg_g, probs_g = args  # (gr,d), (gr,E)
+        dispatch, combine = _dispatch(probs_g, cfg.top_k, cap)
+        xe = jnp.einsum("gec,gd->ecd", dispatch.astype(x.dtype), xg_g)
+
+        def run_expert(ep, xe_e):  # xe_e (C,d)
+            return mlp_apply(ep, xe_e, cfg.act)
+
+        he = jax.vmap(run_expert)(p["experts"], xe)  # (E,C,d)
+        y_g = jnp.einsum("gec,ecd->gd", combine.astype(x.dtype), he)
+        frac_g = dispatch.sum(axis=(0, 2)) / (group * cfg.top_k)  # (E,)
+        return y_g, frac_g
+
+    if n_groups == 1:
+        y, frac = one_group((xg[0], probs[0]))
+        y, frac = y[None], frac[None]
+    else:
+        # sequential over groups: bounds live dispatch/einsum memory to one
+        # group regardless of token count (1M tokens at train_4k)
+        y, frac = jax.lax.map(one_group, (xg, probs))
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:g_total]
+    y = y.reshape(B, T, d)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg.act)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    imp = probs.mean(axis=1)  # (n,E)
+    aux = E * jnp.mean(jnp.sum(frac * imp, axis=-1))
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# MoE decoder model (mixtral path: GQA; deepseek path: MLA)
+# ---------------------------------------------------------------------------
+class MoECache(NamedTuple):
+    kv: object  # KVCache (GQA) or mla.MLACache
+    dense_kv: object  # same type, for the first dense layers (or None-like)
+
+
+def _init_block(key, cfg: ModelConfig, moe: bool) -> Params:
+    ka, km = jax.random.split(key)
+    p = {
+        "attn": (mla.init_mla(ka, cfg) if cfg.use_mla else attn.init_attention(ka, cfg)),
+        "ln_attn": init_rms(cfg.d_model, cfg.dtype),
+        "ln_mlp": init_rms(cfg.d_model, cfg.dtype),
+    }
+    if moe:
+        p["moe"] = init_moe_layer(km, cfg)
+    else:
+        p["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ke, kd, kl = jax.random.split(key, 3)
+    nf = cfg.first_dense_layers
+    params = {
+        "embed": init_embed(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "layers": stack_layers(lambda k: _init_block(k, cfg, True), kl, cfg.n_layers - nf),
+        "ln_f": init_rms(cfg.d_model, cfg.dtype),
+    }
+    if nf:
+        params["dense_layers"] = stack_layers(lambda k: _init_block(k, cfg, False), kd, nf)
+    return params
+
+
+def _attn_fwd(layer, x, positions, cfg, window, mask):
+    if cfg.use_mla:
+        return mla.mla_forward(layer["attn"], x, positions, cfg, window, mask)
+    return attn.attention_forward(layer["attn"], x, positions, cfg, window, mask)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            lengths: Optional[jnp.ndarray] = None,
+            window: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits, aux_loss)."""
+    window = window if window is not None else cfg.sliding_window
+    B, T = tokens.shape
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    from repro.models.transformer import make_positions
+    positions = make_positions(tokens, lengths)
+    mask = (None if T >= attn.CHUNK_THRESHOLD
+            else attn.prefill_mask(positions, window))
+    h = embed_apply(params["embed"], tokens, cfg)
+
+    def dense_body(carry, layer):
+        a = _attn_fwd(layer, rms_norm(carry, layer["ln_attn"], cfg.norm_eps),
+                      positions, cfg, window, mask)
+        h2 = carry + a
+        m = mlp_apply(layer["mlp"], rms_norm(h2, layer["ln_mlp"], cfg.norm_eps), cfg.act)
+        return h2 + m, None
+
+    def moe_body(carry, layer):
+        a = _attn_fwd(layer, rms_norm(carry, layer["ln_attn"], cfg.norm_eps),
+                      positions, cfg, window, mask)
+        h2 = carry + a
+        m, aux = moe_apply(layer["moe"], rms_norm(h2, layer["ln_mlp"], cfg.norm_eps), cfg)
+        return h2 + m, aux
+
+    if cfg.first_dense_layers:
+        h, _ = scan_layers(dense_body, h, params["dense_layers"], remat=cfg.remat)
+    h, auxs = scan_layers(moe_body, h, params["layers"], remat=cfg.remat)
+    logits = unembed_apply(params["embed"], rms_norm(h, params["ln_f"], cfg.norm_eps))
+    return logits, jnp.mean(auxs)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            lengths: jnp.ndarray, cache_window: int,
+            window: Optional[int] = None) -> Tuple[jnp.ndarray, MoECache]:
+    window = window if window is not None else cfg.sliding_window
+    from repro.models.transformer import make_positions
+    positions = make_positions(tokens, lengths)
+    T = positions.shape[1]
+    mask = (None if T >= attn.CHUNK_THRESHOLD
+            else attn.prefill_mask(positions, window))
+    h = embed_apply(params["embed"], tokens, cfg)
+    # SWA archs only ever need `window` ring slots; full attention needs L_i+S
+    Wc = cache_window if window is None else min(cache_window, window)
+
+    def body(moe: bool):
+        def go(carry, layer):
+            x = rms_norm(carry, layer["ln_attn"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, c1, c2 = mla.mla_prefill(layer["attn"], x, positions, cfg,
+                                            window, Wc, mask)
+            else:
+                a, c1, c2 = attn.attention_prefill(layer["attn"], x, positions,
+                                                   cfg, window, Wc, mask=mask)
+            h2 = carry + a
+            xm = rms_norm(h2, layer["ln_mlp"], cfg.norm_eps)
+            if moe:
+                m, _ = moe_apply(layer["moe"], xm, cfg)
+            else:
+                m = mlp_apply(layer["mlp"], xm, cfg.act)
+            return h2 + m, (c1, c2)
+        return go
+
+    if cfg.first_dense_layers:
+        h, (dk, dv) = scan_layers(body(False), h, params["dense_layers"])
+    h, (k_all, v_all) = scan_layers(body(True), h, params["layers"])
+    logits = unembed_apply(params["embed"],
+                           rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps))[:, 0]
+
+    def mk_cache(k, v):
+        common = dict(
+            slot_pos=attn.prefill_slot_pos(positions, Wc),
+            write_idx=jnp.asarray(T if Wc >= T else Wc, jnp.int32),
+            lengths=lengths.astype(jnp.int32))
+        if cfg.use_mla:
+            return mla.MLACache(ckv=k, kr=v, **common)
+        return KVCache(k=k, v=v, **common)
+
+    dense_cache = mk_cache(dk, dv) if cfg.first_dense_layers else None
+    return logits, MoECache(kv=mk_cache(k_all, v_all), dense_kv=dense_cache)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: MoECache,
+                tokens: jnp.ndarray, step: jnp.ndarray,
+                window: Optional[int] = None) -> Tuple[jnp.ndarray, MoECache]:
+    window = window if window is not None else cfg.sliding_window
+    kvc = cache.kv
+    q_pos = kvc.lengths + step
+    slot = attn.decode_slot(kvc) if not cfg.use_mla else mla.decode_slot(kvc)
+    slot_pos = (attn.decode_slot_pos(kvc, q_pos) if not cfg.use_mla
+                else mla.decode_slot_pos(kvc, q_pos))
+    h = embed_apply(params["embed"], tokens[:, None], cfg)
+
+    def body(moe: bool):
+        def go(carry, layer, c1, c2):
+            x = rms_norm(carry, layer["ln_attn"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, c1, c2 = mla.mla_decode(layer["attn"], x, q_pos, c1, c2,
+                                           slot_pos, slot, cfg, window)
+            else:
+                a, c1, c2 = attn.attention_decode(layer["attn"], x, q_pos, c1, c2,
+                                                  slot_pos, slot, cfg, window)
+            h2 = carry + a
+            xm = rms_norm(h2, layer["ln_mlp"], cfg.norm_eps)
+            if moe:
+                m, _ = moe_apply(layer["moe"], xm, cfg)
+            else:
+                m = mlp_apply(layer["mlp"], xm, cfg.act)
+            return h2 + m, (c1, c2)
+        return go
+
+    if cfg.first_dense_layers:
+        dc = cache.dense_kv
+        d1, d2 = (dc.ckv, dc.kr) if cfg.use_mla else (dc.k, dc.v)
+        h, (nd1, nd2) = scan_layers(body(False), h, params["dense_layers"], d1, d2)
+        if cfg.use_mla:
+            new_dense = dc._replace(ckv=nd1, kr=nd2, slot_pos=slot_pos,
+                                    write_idx=dc.write_idx + 1)
+        else:
+            new_dense = dc._replace(k=nd1, v=nd2, slot_pos=slot_pos,
+                                    write_idx=dc.write_idx + 1)
+    else:
+        new_dense = cache.dense_kv
+
+    c1, c2 = (kvc.ckv, kvc.kr) if cfg.use_mla else (kvc.k, kvc.v)
+    h, (n1, n2) = scan_layers(body(True), h, params["layers"], c1, c2)
+    logits = unembed_apply(params["embed"],
+                           rms_norm(h, params["ln_f"], cfg.norm_eps))[:, 0]
+    if cfg.use_mla:
+        new_kv = kvc._replace(ckv=n1, kr=n2, slot_pos=slot_pos,
+                              write_idx=kvc.write_idx + 1)
+    else:
+        new_kv = kvc._replace(k=n1, v=n2, slot_pos=slot_pos,
+                              write_idx=kvc.write_idx + 1)
+    return logits, MoECache(kv=new_kv, dense_kv=new_dense)

@@ -1,0 +1,315 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU gated linear
+recurrences interleaved 2:1 with local sliding-window MQA attention.
+
+Layer pattern: groups of (rec, rec, attn) consumed by one lax.scan over
+groups; ``n_layers % 3`` leftover layers form a small recurrent tail stack.
+Every temporal block is followed by a GeGLU MLP (both pre-norm, residual).
+
+The RG-LRU train path uses ``jax.lax.associative_scan`` over the linear
+recurrence h_t = a_t h_{t-1} + b_t (identity transition at left pads);
+decode is the exact one-step recurrence.  Decode state is O(1) in context
+length (conv tail + h per rec layer, window-sized KV ring per attn layer),
+so long_500k runs natively (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ModelConfig, Params, dense_apply, dense_param,
+                                 embed_apply, init_embed, init_mlp, init_rms,
+                                 mlp_apply, normal_init, rms_norm, scan_layers,
+                                 stack_layers, unembed_apply)
+
+_RG_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+class RGCache(NamedTuple):
+    conv: jnp.ndarray      # (G, 2, B, W-1, d_lru)
+    h: jnp.ndarray         # (G, 2, B, d_lru)
+    attn_k: jnp.ndarray    # (G, B, Wloc, 1, D)
+    attn_v: jnp.ndarray
+    tail_conv: jnp.ndarray  # (Tt, B, W-1, d_lru)
+    tail_h: jnp.ndarray     # (Tt, B, d_lru)
+    slot_pos: jnp.ndarray   # (B, Wloc)
+    write_idx: jnp.ndarray
+    lengths: jnp.ndarray
+
+
+def n_groups_tail(cfg: ModelConfig) -> Tuple[int, int]:
+    return cfg.n_layers // 3, cfg.n_layers % 3
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + recurrent block
+# ---------------------------------------------------------------------------
+def init_rec_block(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4, k5, km = jax.random.split(key, 6)
+    d, dl = cfg.d_model, cfg.d_lru
+    return {
+        "w_in": dense_param(k1, d, dl, cfg.dtype),
+        "w_gate": dense_param(k2, d, dl, cfg.dtype),
+        "w_out": dense_param(k3, dl, d, cfg.dtype),
+        "conv_w": normal_init(k4, (cfg.ssm_conv_width, dl), cfg.dtype, 0.2),
+        "conv_b": jnp.zeros((dl,), cfg.dtype),
+        "lru_a": dense_param(k5, dl, dl, cfg.dtype),  # recurrence gate W_a
+        "lru_x": dense_param(km, dl, dl, cfg.dtype),  # input gate W_x
+        "lambda": jnp.full((dl,), 1.0, jnp.float32),  # softplus -> a in (0,1)
+        "ln": init_rms(d, cfg.dtype),
+        "mlp": init_mlp(jax.random.fold_in(key, 7), d, cfg.d_ff, cfg.dtype),
+        "ln_mlp": init_rms(d, cfg.dtype),
+    }
+
+
+def _rglru_coeffs(p: Params, u: jnp.ndarray, valid: jnp.ndarray):
+    """u (B,T,dl) conv output -> (log_a, b) for h_t = e^{log_a} h + b."""
+    r = jax.nn.sigmoid(dense_apply(p["lru_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["lru_x"], u).astype(jnp.float32))
+    log_a = -_RG_C * jax.nn.softplus(p["lambda"]) * r  # (B,T,dl) <= 0
+    log_a = jnp.where(valid[..., None], log_a, 0.0)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * u.astype(jnp.float32)
+    b = jnp.where(valid[..., None], b, 0.0)
+    return log_a, b
+
+
+def _assoc_scan(log_a, b, h0=None):
+    """Linear recurrence via associative scan. Returns all h_t (B,T,dl)."""
+    if h0 is not None:
+        # fold initial state in as a virtual step: h_1 = a_1 (h0) + b_1
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return hs
+
+
+def _conv(p: Params, u: jnp.ndarray, tail: Optional[jnp.ndarray] = None):
+    W = p["conv_w"].shape[0]
+    if tail is None:
+        x = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        x = jnp.concatenate([tail, u], axis=1)
+    out = sum(x[:, i:i + u.shape[1], :] * p["conv_w"][i][None, None] for i in range(W))
+    return out + p["conv_b"]
+
+
+def rec_block_forward(p: Params, h: jnp.ndarray, valid: jnp.ndarray,
+                      cfg: ModelConfig, conv_tail=None, h0=None):
+    """Returns (new_h, final_lru_state, new_conv_tail)."""
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], x), approximate=True)
+    u = dense_apply(p["w_in"], x)
+    u = jnp.where(valid[..., None], u, 0.0)
+    uc = _conv(p, u, conv_tail)
+    log_a, b = _rglru_coeffs(p, uc, valid)
+    hs = _assoc_scan(log_a, b, h0)
+    y = dense_apply(p["w_out"], hs.astype(h.dtype) * gate)
+    h = h + y
+    h = h + mlp_apply(p["mlp"], rms_norm(h, p["ln_mlp"], cfg.norm_eps), cfg.act)
+    W = cfg.ssm_conv_width
+    return h, hs[:, -1], u[:, -(W - 1):]
+
+
+def rec_block_decode(p: Params, h: jnp.ndarray, conv_state: jnp.ndarray,
+                     lru_h: jnp.ndarray, cfg: ModelConfig):
+    """h (B,1,d); conv_state (B,W-1,dl); lru_h (B,dl) fp32."""
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], x), approximate=True)
+    u = dense_apply(p["w_in"], x)[:, 0]  # (B,dl)
+    window = jnp.concatenate([conv_state, u[:, None]], axis=1)
+    uc = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    log_a, b = _rglru_coeffs(p, uc[:, None], jnp.ones((uc.shape[0], 1), bool))
+    new_h = jnp.exp(log_a[:, 0]) * lru_h + b[:, 0]
+    y = dense_apply(p["w_out"], new_h[:, None].astype(h.dtype) * gate)
+    h = h + y
+    h = h + mlp_apply(p["mlp"], rms_norm(h, p["ln_mlp"], cfg.norm_eps), cfg.act)
+    return h, window[:, 1:], new_h
+
+
+# ---------------------------------------------------------------------------
+# attention block (local MQA) — reuses models.attention
+# ---------------------------------------------------------------------------
+def init_attn_block(key, cfg: ModelConfig) -> Params:
+    ka, km = jax.random.split(key)
+    return {
+        "attn": attn.init_attention(ka, cfg),
+        "ln": init_rms(cfg.d_model, cfg.dtype),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.dtype),
+        "ln_mlp": init_rms(cfg.d_model, cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+def init_group(key, cfg: ModelConfig) -> Params:
+    kr, ka = jax.random.split(key)
+    return {
+        "rec": stack_layers(lambda k: init_rec_block(k, cfg), kr, 2),
+        "attn": init_attn_block(ka, cfg),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    G, Tt = n_groups_tail(cfg)
+    ke, kg, kt = jax.random.split(key, 3)
+    params = {
+        "embed": init_embed(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "groups": stack_layers(lambda k: init_group(k, cfg), kg, G),
+        "ln_f": init_rms(cfg.d_model, cfg.dtype),
+    }
+    if Tt:
+        params["tail"] = stack_layers(lambda k: init_rec_block(k, cfg), kt, Tt)
+    return params
+
+
+def _take(stacked: Params, i: int) -> Params:
+    return jax.tree.map(lambda x: x[i], stacked)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            lengths: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    B, T = tokens.shape
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    from repro.models.transformer import make_positions
+    positions = make_positions(tokens, lengths)
+    valid = positions >= 0
+    mask = (None if T >= attn.CHUNK_THRESHOLD
+            else attn.prefill_mask(positions, cfg.local_window))
+    h = embed_apply(params["embed"], tokens, cfg)
+    h = jnp.where(valid[..., None], h, 0.0)
+
+    def group_body(carry, group):
+        g = carry
+        for j in range(2):
+            rp = _take(group["rec"], j)
+            g, _, _ = rec_block_forward(rp, g, valid, cfg)
+        ab = group["attn"]
+        a = attn.attention_forward(ab["attn"], rms_norm(g, ab["ln"], cfg.norm_eps),
+                                   positions, cfg, cfg.local_window, mask)
+        g = g + a
+        g = g + mlp_apply(ab["mlp"], rms_norm(g, ab["ln_mlp"], cfg.norm_eps), cfg.act)
+        return g, None
+
+    h, _ = scan_layers(group_body, h, params["groups"], remat=cfg.remat)
+    if "tail" in params:
+        def tail_body(carry, layer):
+            g, _, _ = rec_block_forward(layer, carry, valid, cfg)
+            return g, None
+        h, _ = scan_layers(tail_body, h, params["tail"])
+    return unembed_apply(params["embed"], rms_norm(h, params["ln_f"], cfg.norm_eps))
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            lengths: jnp.ndarray, cache_window: int = 0
+            ) -> Tuple[jnp.ndarray, RGCache]:
+    """``cache_window`` is the total requested width (L_i + S from the
+    engine); the recurrent state is O(1) regardless.  Attention layers cache
+    ``min(cfg.local_window, cache_window)`` ring slots."""
+    B, T = tokens.shape
+    from repro.models.transformer import make_positions
+    positions = make_positions(tokens, lengths)
+    valid = positions >= 0
+    mask = (None if T >= attn.CHUNK_THRESHOLD
+            else attn.prefill_mask(positions, cfg.local_window))
+    if cache_window <= 0:
+        cache_window = T + 64  # decode headroom fallback
+    Wloc = min(cfg.local_window, cache_window)
+    h = embed_apply(params["embed"], tokens, cfg)
+    h = jnp.where(valid[..., None], h, 0.0)
+
+    def group_body(carry, group):
+        g = carry
+        rec_states, rec_convs = [], []
+        for j in range(2):
+            rp = _take(group["rec"], j)
+            g, st, ct = rec_block_forward(rp, g, valid, cfg)
+            rec_states.append(st)
+            rec_convs.append(ct)
+        ab = group["attn"]
+        x = rms_norm(g, ab["ln"], cfg.norm_eps)
+        a, kc, vc = attn.attention_prefill(ab["attn"], x, positions, cfg,
+                                           cfg.local_window, Wloc, mask=mask)
+        g = g + a
+        g = g + mlp_apply(ab["mlp"], rms_norm(g, ab["ln_mlp"], cfg.norm_eps), cfg.act)
+        return g, (jnp.stack(rec_states), jnp.stack(rec_convs), kc, vc)
+
+    h, (hs, convs, k_all, v_all) = scan_layers(group_body, h, params["groups"])
+
+    Tt = cfg.n_layers % 3
+    if Tt:
+        def tail_body(carry, layer):
+            g, st, ct = rec_block_forward(layer, carry, valid, cfg)
+            return g, (st, ct)
+        h, (tail_h, tail_conv) = scan_layers(tail_body, h, params["tail"])
+    else:
+        dl = cfg.d_lru
+        tail_h = jnp.zeros((0, B, dl), jnp.float32)
+        tail_conv = jnp.zeros((0, B, cfg.ssm_conv_width - 1, dl), cfg.dtype)
+
+    logits = unembed_apply(params["embed"],
+                           rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps))[:, 0]
+    cache = RGCache(
+        conv=convs, h=hs, attn_k=k_all, attn_v=v_all,
+        tail_conv=tail_conv, tail_h=tail_h,
+        slot_pos=attn.prefill_slot_pos(positions, Wloc),
+        write_idx=jnp.asarray(T if Wloc >= T else Wloc, jnp.int32),
+        lengths=lengths.astype(jnp.int32),
+    )
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: RGCache,
+                tokens: jnp.ndarray, step: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, RGCache]:
+    q_pos = cache.lengths + step
+    # note: keep the group axis so KVCache.window reads shape[2] == Wloc
+    fake = attn.KVCache(cache.attn_k, cache.attn_v, cache.slot_pos,
+                        cache.write_idx, cache.lengths)
+    slot = attn.decode_slot(fake)
+    slot_pos = attn.decode_slot_pos(fake, q_pos)
+    h = embed_apply(params["embed"], tokens[:, None], cfg)
+
+    def group_body(carry, group, conv, lru_h, kc, vc):
+        g = carry
+        new_conv, new_h = [], []
+        for j in range(2):
+            rp = _take(group["rec"], j)
+            g, cj, hj = rec_block_decode(rp, g, conv[j], lru_h[j], cfg)
+            new_conv.append(cj)
+            new_h.append(hj)
+        ab = group["attn"]
+        x = rms_norm(g, ab["ln"], cfg.norm_eps)
+        a, kc, vc = attn.attention_decode(ab["attn"], x, q_pos, kc, vc,
+                                          slot_pos, slot, cfg, cfg.local_window)
+        g = g + a
+        g = g + mlp_apply(ab["mlp"], rms_norm(g, ab["ln_mlp"], cfg.norm_eps), cfg.act)
+        return g, (jnp.stack(new_conv), jnp.stack(new_h), kc, vc)
+
+    h, (convs, hs, k_all, v_all) = scan_layers(
+        group_body, h, params["groups"], cache.conv, cache.h,
+        cache.attn_k, cache.attn_v)
+
+    if cache.tail_h.shape[0]:
+        def tail_body(carry, layer, conv, lru_h):
+            g, cj, hj = rec_block_decode(layer, carry, conv, lru_h, cfg)
+            return g, (cj, hj)
+        h, (tail_conv, tail_h) = scan_layers(tail_body, h, params["tail"],
+                                             cache.tail_conv, cache.tail_h)
+    else:
+        tail_conv, tail_h = cache.tail_conv, cache.tail_h
+
+    logits = unembed_apply(params["embed"],
+                           rms_norm(h, params["ln_f"], cfg.norm_eps))[:, 0]
+    return logits, cache._replace(conv=convs, h=hs, attn_k=k_all, attn_v=v_all,
+                                  tail_conv=tail_conv, tail_h=tail_h,
+                                  slot_pos=slot_pos, write_idx=cache.write_idx + 1)

@@ -1,0 +1,156 @@
+"""Cluster-level tests: simulator invariants, paper-claim ordering, trace
+properties, and the real-execution cluster."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.trace import (CODEFUSE, SHAREGPT, generate_trace,
+                                 length_distribution_summary)
+from repro.core.estimator import ServingTimeEstimator, a100_llama13b_profile
+from repro.core.memory import (A100_80GB_AVAILABLE, AnalyticMemoryEstimator,
+                               LLAMA2_13B_DELTA)
+from repro.core.schedulers import make_strategy
+
+
+@pytest.fixture(scope="module")
+def sim_env():
+    true_lat = a100_llama13b_profile()
+    rng = np.random.default_rng(0)
+    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    mem = AnalyticMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                  m_available=A100_80GB_AVAILABLE, zeta=0.9)
+    return true_lat, est, mem
+
+
+def run(name, sim_env, rate=24.0, duration=120.0, workers=4, **kw):
+    true_lat, est, mem = sim_env
+    trace = generate_trace(rate, duration, CODEFUSE, seed=1)
+    s = make_strategy(name, slice_len=128, fixed_batch_size=12, gamma=3.0, **kw)
+    sim = ClusterSimulator(s, workers, true_lat, est, mem, seed=2)
+    return sim.run(copy.deepcopy(trace), duration).metrics
+
+
+def test_trace_matches_fig6_shape():
+    t = generate_trace(20, 300, CODEFUSE, seed=0)
+    s = length_distribution_summary(t)
+    assert s["frac_lt_512"] > 0.9  # "vast majority < 512" (Fig. 6)
+    assert s["gen_p50"] < 200
+    t2 = generate_trace(20, 300, SHAREGPT, seed=0)
+    assert length_distribution_summary(t2)["frac_lt_512"] > 0.8
+
+
+def test_all_requests_complete_under_every_strategy(sim_env):
+    for name in ("sls", "ils", "so", "pm", "ab", "lb", "scls"):
+        m = run(name, sim_env, rate=2.0, duration=60.0, workers=2)
+        assert m.n_completed == m.n_requests, name
+
+
+def test_scls_beats_sls_and_ils_throughput(sim_env):
+    """Headline claim (Fig. 12): SCLS > ILS > SLS in throughput; response
+    times the other way around."""
+    sls = run("sls", sim_env)
+    ils = run("ils", sim_env)
+    scls = run("scls", sim_env)
+    assert scls.throughput > ils.throughput > sls.throughput
+    assert scls.mean_response < sls.mean_response
+    assert scls.p95_response < sls.p95_response
+
+
+def test_ablation_chain_monotone(sim_env):
+    """Fig. 15: each added SCLS feature should not hurt throughput much and
+    the full chain must improve substantially over SO."""
+    so = run("so", sim_env)
+    ab = run("ab", sim_env)
+    scls = run("scls", sim_env)
+    assert ab.throughput > so.throughput
+    assert scls.throughput >= ab.throughput * 0.95
+    assert scls.throughput > so.throughput * 1.3
+
+
+def test_slicing_reduces_invalid_tokens(sim_env):
+    """Fig. 13a/16a: generation slicing slashes invalid tokens."""
+    sls = run("sls", sim_env)
+    so = run("so", sim_env)
+    assert so.avg_invalid_tokens < sls.avg_invalid_tokens * 0.5
+
+
+def test_adaptive_batching_increases_batch_size(sim_env):
+    """Fig. 13b/16b: lifting the fixed cap grows batch sizes."""
+    pm = run("pm", sim_env)
+    ab = run("ab", sim_env)
+    assert ab.avg_batch_size > pm.avg_batch_size
+
+
+def test_maxmin_improves_load_balance_at_moderate_load(sim_env):
+    """Fig. 17: SCLS balances load far better than round-robin SLS."""
+    sls = run("sls", sim_env, rate=10.0, duration=240.0)
+    scls = run("scls", sim_env, rate=10.0, duration=240.0)
+    assert scls.ct_std < sls.ct_std
+
+
+def test_early_return_ratio_small_for_scls(sim_env):
+    """Fig. 14b: < a few percent of batches return early at S=128."""
+    m = run("scls", sim_env)
+    assert m.early_return_ratio < 0.05
+
+
+def test_most_requests_finish_in_few_slices(sim_env):
+    """Fig. 14a: vast majority of requests need <= 3 schedules at S=128."""
+    true_lat, est, mem = sim_env
+    trace = generate_trace(8.0, 120.0, CODEFUSE, seed=1)
+    s = make_strategy("scls", slice_len=128)
+    sim = ClusterSimulator(s, 4, true_lat, est, mem, seed=2)
+    res = sim.run(trace, 120.0)
+    sched = np.array([r.n_schedules for r in res.requests if r.done])
+    assert np.mean(sched <= 3) > 0.85
+
+
+def test_scalability_linear_in_workers(sim_env):
+    """Fig. 22: throughput grows ~linearly with worker count (saturated)."""
+    m2 = run("scls", sim_env, rate=30.0, duration=120.0, workers=2)
+    m4 = run("scls", sim_env, rate=30.0, duration=120.0, workers=4)
+    assert m4.throughput > m2.throughput * 1.6
+
+
+def test_simulator_conservation(sim_env):
+    """No request is lost or duplicated; token accounting is consistent."""
+    true_lat, est, mem = sim_env
+    trace = generate_trace(5.0, 60.0, CODEFUSE, seed=3)
+    s = make_strategy("scls", slice_len=64)
+    sim = ClusterSimulator(s, 3, true_lat, est, mem, seed=1)
+    res = sim.run(trace, 60.0)
+    for r in res.requests:
+        assert r.done
+        assert r.generated == min(r.gen_len, r.max_gen)
+        assert r.n_schedules >= 1
+        assert r.finish_time >= r.arrival
+
+
+def test_scls_cb_beyond_paper_beats_both(sim_env):
+    """Beyond-paper (paper §7): slice leases on continuous batching should
+    dominate both plain SCLS (no padding/invalid tokens) and ILS (no
+    conservative cap, max-min placement)."""
+    ils = run("ils", sim_env)
+    scls = run("scls", sim_env)
+    cb = run("scls-cb", sim_env)
+    assert cb.throughput > scls.throughput > ils.throughput
+    assert cb.mean_response < scls.mean_response
+    assert cb.ct_std < scls.ct_std
+    assert cb.avg_invalid_tokens == 0.0 and cb.avg_pad_tokens == 0.0
+
+
+def test_oracle_loses_to_slicing(sim_env):
+    """Beyond-paper: even a perfect generation-length predictor with static
+    batching loses to SCLS — the bounded horizon packs finer than
+    length-aware full-run batches (head-of-line + Eq. 8 memory bound)."""
+    oracle = run("oracle", sim_env)
+    scls = run("scls", sim_env)
+    assert oracle.n_completed == oracle.n_requests
+    assert oracle.avg_schedules == 1.0  # never rescheduled
+    assert scls.throughput > oracle.throughput

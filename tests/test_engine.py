@@ -1,0 +1,123 @@
+"""Serving-engine semantics: static batching (paper §2.4), slicing
+invariance (SCLS §4), continuous batching (ILS baseline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine.continuous_engine import ContinuousEngine
+from repro.engine.static_engine import StaticEngine
+from repro.models.registry import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("llama3.2-1b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, size=s).astype(np.int32) for s in sizes]
+
+
+def test_static_batching_invalid_and_pad_tokens(dense_setup):
+    """Completed requests keep generating invalid tokens until the batch
+    finishes (paper §2.4), and short inputs get pad tokens."""
+    cfg, model, params = dense_setup
+    eng = StaticEngine(model, params, eos_id=1, len_bucket=8)
+    res = eng.serve_batch(_prompts(cfg, [5, 11, 3]), slice_len=8,
+                          forced_gen_lens=[3, 8, 20])
+    assert res.steps == 8  # ran the full slice: request 2 not finished
+    r0, r1, r2 = res.results
+    assert r0["n_valid"] == 3 and r0["invalid"] == 5 and r0["finished"]
+    assert r1["n_valid"] == 8 and r1["finished"]
+    assert r2["n_valid"] == 8 and not r2["finished"]
+    assert r0["pad"] == res.batch_input_len - 5
+    assert r2["pad"] == res.batch_input_len - 3
+
+
+def test_static_batching_early_return_when_all_finish(dense_setup):
+    cfg, model, params = dense_setup
+    eng = StaticEngine(model, params, eos_id=1, len_bucket=8)
+    res = eng.serve_batch(_prompts(cfg, [4, 6]), slice_len=32,
+                          forced_gen_lens=[2, 3])
+    assert res.early_return and res.steps == 3  # stops when ALL are done
+
+
+def test_slice_invariance_of_generated_tokens(dense_setup):
+    """THE SCLS correctness property: serving a request in k slices with
+    prefill re-computation yields exactly the tokens of one-shot serving."""
+    cfg, model, params = dense_setup
+    eng = StaticEngine(model, params, eos_id=1, len_bucket=8)
+    prompts = _prompts(cfg, [7])
+    total = 20
+    one_shot = eng.serve_batch(prompts, slice_len=32,
+                               forced_gen_lens=[total]).results[0]["tokens"]
+    # now in slices of 8, rescheduling with already_generated
+    got, remaining = [], total
+    while remaining > 0:
+        res = eng.serve_batch(prompts, slice_len=8, forced_gen_lens=[remaining],
+                              already_generated=[got])
+        got.extend(res.results[0]["tokens"])
+        remaining = total - len(got)
+    assert got == one_shot
+
+
+def test_slice_invariance_with_batch_companions(dense_setup):
+    """Tokens of a request must not depend on its batch companions."""
+    cfg, model, params = dense_setup
+    eng = StaticEngine(model, params, eos_id=1, len_bucket=8)
+    p = _prompts(cfg, [9, 4, 13], seed=2)
+    solo = eng.serve_batch([p[0]], slice_len=8, forced_gen_lens=[8]).results[0]["tokens"]
+    together = eng.serve_batch(p, slice_len=8,
+                               forced_gen_lens=[8, 5, 6]).results[0]["tokens"]
+    assert solo == together
+
+
+def test_eos_detection_without_forced_lens(dense_setup):
+    cfg, model, params = dense_setup
+    eng = StaticEngine(model, params, eos_id=1, len_bucket=8)
+    res = eng.serve_batch(_prompts(cfg, [5]), slice_len=8)
+    r = res.results[0]
+    assert 1 <= r["n_valid"] <= 8
+    if r["n_valid"] < 8:
+        assert r["tokens"][-1] == 1  # ended on a real EOS
+
+
+def test_continuous_engine_matches_static_tokens(dense_setup):
+    cfg, model, params = dense_setup
+    ce = ContinuousEngine(model, params, max_slots=2, max_context=64,
+                          eos_id=1, len_bucket=8)
+    se = StaticEngine(model, params, eos_id=1, len_bucket=8)
+    prompts = _prompts(cfg, [5, 9, 4], seed=3)
+    res = ce.serve(prompts, forced_gen_lens=[4, 6, 3])
+    for i, p in enumerate(prompts):
+        want = se.serve_batch([p], slice_len=16,
+                              forced_gen_lens=[[4, 6, 3][i]]).results[0]["tokens"]
+        assert res.outputs[i] == want
+
+
+def test_continuous_engine_respects_slot_cap(dense_setup):
+    cfg, model, params = dense_setup
+    ce = ContinuousEngine(model, params, max_slots=2, max_context=64,
+                          eos_id=1, len_bucket=8)
+    res = ce.serve(_prompts(cfg, [4] * 5, seed=4), forced_gen_lens=[3] * 5)
+    # with 2 slots and 5 requests of 3 tokens each: at least 3 join waves
+    assert res.join_order == [0, 1, 2, 3, 4]
+    assert all(len(o) == 3 for o in res.outputs)
+
+
+def test_engine_profiler_produces_fittable_samples(dense_setup):
+    from repro.engine.profiler import fit_estimator
+    cfg, model, params = dense_setup
+    est, prmse, drmse = fit_estimator(model, params, batch_sizes=(1, 2),
+                                      input_lens=(16, 32), n_decode_iters=2,
+                                      repeats=1)
+    assert est.t_serve(2, 32, 4) > 0
+    assert np.isfinite(prmse) and np.isfinite(drmse)

@@ -1,0 +1,169 @@
+"""Pallas kernel validation: shape/dtype sweeps against the jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.ref import decode_attention_ref, flash_prefill_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, T, Hq, Hkv, D, dtype=jnp.float32, key=KEY):
+    q = jax.random.normal(key, (B, T, Hq, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, Hkv, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hkv, D), dtype)
+    return q, k, v
+
+
+def _positions(B, T, lengths):
+    idx = jnp.arange(T)[None]
+    L = jnp.asarray(lengths)[:, None]
+    return jnp.where(idx < T - L, -1, idx - (T - L)).astype(jnp.int32)
+
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,D", [
+    (1, 16, 1, 1, 8),
+    (2, 32, 4, 2, 16),
+    (2, 32, 4, 1, 32),     # MQA
+    (1, 64, 8, 8, 16),     # MHA
+    (3, 24, 6, 2, 64),     # non-pow2 batch, T%8==0
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 8])
+def test_flash_prefill_sweep(B, T, Hq, Hkv, D, dtype, window):
+    q, k, v = _qkv(B, T, Hq, Hkv, D, dtype)
+    lengths = [T] + [max(1, T - 5)] * (B - 1)
+    pos = _positions(B, T, lengths)
+    out = flash_prefill(q, k, v, pos, window=window, block_q=8, block_k=8,
+                        interpret=True)
+    ref = flash_prefill_ref(q, k, v, pos, window=window)
+    valid = (pos >= 0)[..., None, None]
+    np.testing.assert_allclose(
+        np.asarray((out * valid).astype(jnp.float32)),
+        np.asarray((ref * valid).astype(jnp.float32)), atol=ATOL[dtype])
+
+
+@pytest.mark.parametrize("B,W,Hq,Hkv,D", [
+    (1, 8, 1, 1, 8),
+    (2, 24, 8, 2, 16),
+    (4, 16, 4, 1, 32),     # MQA
+    (2, 64, 4, 4, 64),     # MHA, long cache
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 6])
+def test_decode_attention_sweep(B, W, Hq, Hkv, D, dtype, window):
+    kc = jax.random.normal(KEY, (B, W, Hkv, D), dtype)
+    vc = jax.random.normal(jax.random.fold_in(KEY, 1), (B, W, Hkv, D), dtype)
+    q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hq, D), dtype)
+    rng = np.random.default_rng(0)
+    slot_pos = np.full((B, W), -1, np.int32)
+    q_pos = []
+    for b in range(B):
+        fill = rng.integers(1, W + 1)
+        slot_pos[b, :fill] = np.arange(fill)
+        q_pos.append(fill)
+    out = decode_attention(q, kc, vc, jnp.asarray(slot_pos), jnp.asarray(q_pos),
+                           window=window, block_w=8, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, jnp.asarray(slot_pos),
+                               jnp.asarray(q_pos), window=window)
+    np.testing.assert_allclose(np.asarray(out.astype(jnp.float32)),
+                               np.asarray(ref.astype(jnp.float32)),
+                               atol=ATOL[dtype])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([8, 16, 32]),
+       st.sampled_from([(4, 2), (2, 1), (4, 4)]), st.sampled_from([8, 16]))
+def test_flash_prefill_property(B, T, heads, D):
+    """Random shapes: kernel == oracle on all real-token rows."""
+    Hq, Hkv = heads
+    q, k, v = _qkv(B, T, Hq, Hkv, D)
+    lengths = [T - (i % T) for i in range(B)]
+    pos = _positions(B, T, lengths)
+    out = flash_prefill(q, k, v, pos, block_q=8, block_k=8, interpret=True)
+    ref = flash_prefill_ref(q, k, v, pos)
+    valid = (pos >= 0)[..., None, None]
+    np.testing.assert_allclose(np.asarray(out * valid), np.asarray(ref * valid),
+                               atol=5e-5)
+
+
+def test_ring_cache_decode_kernel():
+    """Ring layout (wrapped positions) must be handled purely via slot_pos."""
+    B, W, H, D = 1, 8, 2, 16
+    kc = jax.random.normal(KEY, (B, W, H, D))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 1), (B, W, H, D))
+    q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, 4, D))
+    # cache holds positions 5..12 wrapped: slot i has position (5+i) rotated
+    slot_pos = jnp.asarray(np.roll(np.arange(5, 13), 3)[None].astype(np.int32))
+    q_pos = jnp.array([12])
+    out = decode_attention(q, kc, vc, slot_pos, q_pos, window=6, block_w=4,
+                           interpret=True)
+    ref = decode_attention_ref(q, kc, vc, slot_pos, q_pos, window=6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_ops_dispatch_xla_equals_pallas():
+    q, k, v = _qkv(2, 16, 4, 2, 16)
+    pos = _positions(2, 16, [16, 10])
+    a = ops.prefill_attention(q, k, v, pos, impl="xla")
+    b = ops.prefill_attention(q, k, v, pos, impl="pallas", block_q=8, block_k=8)
+    valid = (pos >= 0)[..., None, None]
+    np.testing.assert_allclose(np.asarray(a * valid), np.asarray(b * valid), atol=2e-5)
+
+    kc = jax.random.normal(KEY, (2, 16, 2, 16))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 5), (2, 16, 2, 16))
+    qd = jax.random.normal(jax.random.fold_in(KEY, 6), (2, 4, 16))
+    slot_pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16)).astype(jnp.int32)
+    q_pos = jnp.array([15, 15])
+    a = ops.decode_gqa_attention(qd, kc, vc, slot_pos, q_pos, impl="xla")
+    b = ops.decode_gqa_attention(qd, kc, vc, slot_pos, q_pos, impl="pallas", block_w=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,T,H,P,N,Q", [
+    (1, 8, 1, 4, 4, 4),
+    (2, 24, 3, 8, 4, 8),
+    (1, 32, 2, 16, 8, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_scan_sweep(B, T, H, P, N, Q, dtype):
+    """SSD Pallas kernel vs the jnp chunked oracle (and hence, transitively,
+    vs the exact recurrence — see test_models.py)."""
+    from repro.kernels.ssd_scan import ssd_scan
+    from repro.models.mamba2 import _ssd_chunked
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (B, T, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (B, T, H), dtype))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)) * 0.2)
+    Bm = jax.random.normal(jax.random.fold_in(key, 3), (B, T, 1, N), dtype)
+    Cm = jax.random.normal(jax.random.fold_in(key, 4), (B, T, 1, N), dtype)
+    y_ref, st_ref = _ssd_chunked(x, dt, A, Bm, Cm, Q)
+    Bh = jnp.broadcast_to(Bm, (B, T, H, N))
+    Ch = jnp.broadcast_to(Cm, (B, T, H, N))
+    y, st = ssd_scan(x, dt, A, Bh, Ch, Q, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), atol=1e-5)
+
+
+def test_ssd_ops_dispatch():
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(2)
+    B, T, H, P, N = 1, 16, 2, 8, 4
+    x = jax.random.normal(key, (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (B, T, H)))
+    A = -jnp.ones((H,))
+    Bm = jax.random.normal(jax.random.fold_in(key, 2), (B, T, 1, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 3), (B, T, 1, N))
+    y1, s1 = ops.ssd_chunked_scan(x, dt, A, Bm, Cm, chunk=8, impl="xla")
+    y2, s2 = ops.ssd_chunked_scan(x, dt, A, Bm, Cm, chunk=8, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)

@@ -1,0 +1,199 @@
+"""Per-architecture smoke tests (reduced configs, deliverable f) and
+cache/decode consistency properties shared by every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.registry import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, T=12, lengths=(12, 7)):
+    batch = {"tokens": jax.random.randint(KEY, (B, T), 0, cfg.vocab_size),
+             "lengths": jnp.asarray(lengths, jnp.int32)}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.random.normal(KEY, (B, 8, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_prefix_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_forward_and_decode(arch):
+    """One forward/train step + prefill + decode on CPU: shapes + no NaNs."""
+    cfg = get_config(arch, reduced=True)
+    assert cfg.n_layers <= 5 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    model = get_model(cfg)
+    params = model.init(KEY)
+    batch = make_batch(cfg)
+
+    loss = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+    last, cache = model.prefill(params, batch, 24)
+    assert last.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(last).all())
+
+    tok = jnp.argmax(last, -1).astype(jnp.int32)
+    for step in range(3):
+        logits, cache = model.decode_step(params, cache, tok,
+                                          jnp.asarray(step, jnp.int32))
+        assert logits.shape == (2, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_updates_params(arch):
+    """One real optimizer step decreases nothing NaN and changes params."""
+    from repro.launch.steps import make_train_step
+    from repro.optim.adamw import AdamWConfig, init_adamw
+
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    opt = init_adamw(params)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3, warmup_steps=1)))
+    batch = make_batch(cfg)
+    new_params, new_opt, loss = step(params, opt, batch)
+    assert bool(jnp.isfinite(loss))
+    assert int(new_opt.step) == 1
+    diff = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, new_params)
+    assert max(jax.tree.leaves(diff)) > 0
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma-2b", "mixtral-8x22b",
+                                  "deepseek-v2-lite-16b", "mamba2-130m",
+                                  "recurrentgemma-9b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode with cache == argmax of full forward (KV-cache parity)."""
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    B, T = 1, 9
+    toks = jax.random.randint(KEY, (B, T), 2, cfg.vocab_size)
+    batch = {"tokens": toks, "lengths": jnp.array([T])}
+    last, cache = model.prefill(params, batch, T + 8)
+    cur = jnp.argmax(last, -1).astype(jnp.int32)
+    seq = [toks]
+    for step in range(4):
+        seq.append(cur[:, None])
+        logits, cache = model.decode_step(params, cache, cur,
+                                          jnp.asarray(step, jnp.int32))
+        # reference: full forward over the extended sequence
+        full = jnp.concatenate(seq, axis=1)
+        if cfg.family == "moe":
+            from repro.models import moe
+            ref = moe.forward(params, cfg, full)[0][:, -1]
+        elif cfg.family == "ssm":
+            from repro.models import mamba2
+            ref = mamba2.forward(params, cfg, full)[:, -1]
+        elif cfg.family == "hybrid":
+            from repro.models import rglru
+            ref = rglru.forward(params, cfg, full)[:, -1]
+        else:
+            from repro.models import transformer
+            ref = transformer.forward(params, cfg, full)[:, -1]
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                                   atol=3e-3, rtol=1e-3)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_left_pad_invariance_dense():
+    """Logits for a request must not depend on how much left padding it got."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (1, 5), 2, cfg.vocab_size)
+    l1, _ = model.prefill(params, {"tokens": toks, "lengths": jnp.array([5])}, 12)
+    padded = jnp.pad(toks, ((0, 0), (7, 0)))
+    l2, _ = model.prefill(params, {"tokens": padded, "lengths": jnp.array([5])}, 20)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-4)
+
+
+def test_chunked_attention_equals_dense():
+    from repro.models import attention as attn
+    k0 = jax.random.PRNGKey(3)
+    q = jax.random.normal(k0, (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (2, 64, 2, 16))
+    lengths = jnp.array([64, 40])
+    idx = jnp.arange(64)[None]
+    pos = jnp.where(idx < 64 - lengths[:, None], -1, idx - (64 - lengths[:, None]))
+    for window, prefix in [(None, 0), (16, 0), (None, 8)]:
+        m = attn.prefill_mask(pos, window)
+        if prefix:
+            pk, pq = pos[:, None, :], pos[:, :, None]
+            m = m | ((pk >= 0) & (pk < prefix) & (pq >= 0))[:, None]
+        o1 = attn.gqa_attend(q, k, v, m, 0.25)
+        o2 = attn.gqa_attend_chunked(q, k, v, 0.25, pos, pos, window, prefix,
+                                     block_q=16)
+        valid = (pos >= 0)[..., None, None]
+        np.testing.assert_allclose(np.asarray(o1 * valid), np.asarray(o2 * valid),
+                                   atol=2e-5)
+
+
+def test_mamba_chunked_scan_equals_recurrence():
+    from repro.models import mamba2
+    cfg = get_config("mamba2-130m", reduced=True)
+    params = mamba2.init(KEY, cfg)
+    toks = jax.random.randint(KEY, (1, 10), 2, cfg.vocab_size)
+    last, _ = mamba2.prefill(params, cfg, toks, jnp.array([10]))
+    d_in, H, P, N, G, conv_dim = mamba2._dims(cfg)
+    c = mamba2.MambaCache(conv=jnp.zeros((cfg.n_layers, 1, cfg.ssm_conv_width - 1, conv_dim)),
+                          state=jnp.zeros((cfg.n_layers, 1, H, P, N)),
+                          lengths=jnp.array([0]))
+    lg = None
+    for t in range(10):
+        lg, c = mamba2.decode_step(params, cfg, c, toks[0:1, t], jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(last), atol=5e-3, rtol=1e-3)
+
+
+def test_sliding_window_ring_cache_long_decode():
+    """Ring cache at window W gives identical logits to windowed forward."""
+    from repro.models import transformer
+    cfg = get_config("llama3.2-1b", reduced=True).replace(sliding_window=6)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    seq = jax.random.randint(KEY, (1, 9), 2, cfg.vocab_size)
+    last, cache = model.prefill(params, {"tokens": seq, "lengths": jnp.array([9])}, 6)
+    assert cache.k.shape[2] == 6  # ring limited to the window
+    cur = jnp.argmax(last, -1).astype(jnp.int32)
+    toks = [seq]
+    for step in range(6):
+        toks.append(cur[:, None])
+        lg, cache = model.decode_step(params, cache, cur, jnp.asarray(step, jnp.int32))
+        ref = transformer.forward(params, cfg, jnp.concatenate(toks, 1))[:, -1]
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(ref), atol=2e-3, rtol=1e-3)
+        cur = jnp.argmax(lg, -1).astype(jnp.int32)
+
+
+def test_mla_cache_is_compressed():
+    """DeepSeek MLA cache must store latents, not full K/V (the arch's point)."""
+    cfg = get_config("deepseek-v2-lite-16b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(KEY)
+    batch = make_batch(cfg)
+    _, cache = model.prefill(params, batch, 20)
+    ckv = cache.kv.ckv
+    assert ckv.shape[-1] == cfg.kv_lora_rank
+    naive = 2 * cfg.n_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    assert cfg.kv_lora_rank + cfg.qk_rope_head_dim < naive
+
+
+def test_kv_bytes_per_token_accounting():
+    cfg = get_config("llama3.2-1b")
+    model = get_model(cfg)
+    # full GQA: 2 * L * kv * hd * 2 bytes
+    assert model.kv_bytes_per_token() == 2 * 16 * 8 * 64 * 2
+    # sharding 8 kv heads over 16 model shards caps at 8
+    assert model.kv_bytes_per_token(16) == model.kv_bytes_per_token() / 8
+    mla = get_model(get_config("deepseek-v2-lite-16b"))
+    assert mla.kv_bytes_per_token() == 27 * (512 + 64) * 2

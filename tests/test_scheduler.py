@@ -1,0 +1,243 @@
+"""Unit + property tests for the paper's core scheduling algorithms."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batcher import dp_batch, fcfs_batch
+from repro.core.estimator import (LatencyCoeffs, ServingTimeEstimator,
+                                  a100_llama13b_hf_profile,
+                                  a100_llama13b_profile, fit_bilinear)
+from repro.core.interval import next_interval
+from repro.core.memory import (AnalyticMemoryEstimator,
+                               RuleBasedMemoryEstimator, model_kv_delta)
+from repro.core.offloader import MaxMinOffloader, RoundRobinOffloader
+from repro.core.request import Batch, Request, bucket_len
+from repro.core.schedulers import ALL_STRATEGIES, make_strategy
+
+
+def _requests(lens, arrival=0.0):
+    return [Request(rid=i, arrival=arrival, input_len=int(l), gen_len=10)
+            for i, l in enumerate(lens)]
+
+
+def _est(p=(1e-4, 1e-3, 1e-4, 1e-2), d=(1e-6, 1e-4, 1e-6, 1e-3), bucket=1):
+    return ServingTimeEstimator(LatencyCoeffs(*p), LatencyCoeffs(*d), bucket=bucket)
+
+
+# ---------------------------------------------------------------------------
+# estimator (Eq. 1-4)
+# ---------------------------------------------------------------------------
+def test_decode_sum_closed_form_matches_explicit_sum():
+    est = _est()
+    for N in (1, 3, 17):
+        for L in (1, 100, 1000):
+            for S in (1, 8, 128):
+                explicit = sum(est.tau_decode(L + l, N) for l in range(1, S + 1))
+                assert est.t_decode_sum(N, L, S) == pytest.approx(explicit, rel=1e-9)
+
+
+def test_fit_bilinear_recovers_exact_coefficients():
+    true = LatencyCoeffs(3e-5, 2e-3, 1e-4, 5e-2)
+    samples = [(N, L, true(N, L)) for N in (1, 2, 4, 8) for L in (16, 64, 256)]
+    fit, rmse = fit_bilinear(samples)
+    assert rmse < 1e-12
+    np.testing.assert_allclose(fit.as_array(), true.as_array(), rtol=1e-6)
+
+
+def test_estimator_fit_end_to_end():
+    true = a100_llama13b_profile()
+    pre = [(N, L, true.t_prefill(N, L)) for N in (1, 4, 16) for L in (32, 256, 1024)]
+    dec = [(N, L, true.tau_decode(L, N)) for N in (1, 4, 16) for L in (32, 256, 1024)]
+    est, prmse, drmse = ServingTimeEstimator.fit(pre, dec)
+    assert prmse < 1e-9 and drmse < 1e-9
+    assert est.t_serve(8, 512, 128) == pytest.approx(true.t_serve(8, 512, 128), rel=1e-6)
+
+
+def test_bucketing_rounds_up():
+    assert bucket_len(1, 128) == 128
+    assert bucket_len(128, 128) == 128
+    assert bucket_len(129, 128) == 256
+    assert bucket_len(77, 1) == 77
+
+
+# ---------------------------------------------------------------------------
+# memory estimator (Eq. 5-9 + Algorithm 2)
+# ---------------------------------------------------------------------------
+def test_analytic_memory_eq5_and_eq8():
+    mem = AnalyticMemoryEstimator(delta_bytes=1000.0, m_available=1e6, zeta=1.0)
+    # Eq. 5: (L+S)*N*delta
+    assert mem.kv_bytes(4, 100, 28) == (100 + 28) * 4 * 1000.0
+    # Eq. 8 closed form == bisection on fits()
+    for L in (10, 100, 500):
+        nmax = mem.max_batch_size(L, 28)
+        assert mem.fits(nmax, L, 28)
+        assert not mem.fits(nmax + 1, L, 28)
+
+
+def test_zeta_shrinks_capacity():
+    m1 = AnalyticMemoryEstimator(1000.0, 1e6, zeta=1.0)
+    m2 = AnalyticMemoryEstimator(1000.0, 1e6, zeta=0.5)
+    assert m2.max_batch_size(100, 28) <= m1.max_batch_size(100, 28) / 2 + 1
+
+
+def test_rule_based_matches_paper_algorithm2():
+    mem = RuleBasedMemoryEstimator()
+    # paper: L>1024 -> N<=12; L>512 -> N<=22; else N<=28 (L = L_i + S)
+    assert mem.fits(12, 1000, 128) and not mem.fits(13, 1000, 128)
+    assert mem.fits(22, 500, 128) and not mem.fits(23, 500, 128)
+    assert mem.fits(28, 100, 128) and not mem.fits(29, 100, 128)
+
+
+def test_kv_delta_mesh_aware():
+    # sharding KV heads over 8 model shards divides delta by 8
+    assert model_kv_delta(40, 40, 128, 2, 8) == model_kv_delta(40, 40, 128, 2) / 8
+    # MQA (1 kv head) cannot shard: delta unchanged
+    assert model_kv_delta(10, 1, 128, 2, 8) == model_kv_delta(10, 1, 128, 2)
+
+
+# ---------------------------------------------------------------------------
+# DP batcher (Algorithm 1) — optimality via brute force + hypothesis
+# ---------------------------------------------------------------------------
+def _brute_force_best(lens, S, est, mem, cap=None):
+    """Optimal contiguous partition of the sorted requests."""
+    lens = sorted(lens)
+    n = len(lens)
+    best = float("inf")
+    for cuts in itertools.product([0, 1], repeat=n - 1):
+        groups, cur = [], [lens[0]]
+        for i, c in enumerate(cuts):
+            if c:
+                groups.append(cur)
+                cur = []
+            cur.append(lens[i + 1])
+        groups.append(cur)
+        total, ok = 0.0, True
+        for g in groups:
+            N, L = len(g), max(g)
+            if cap is not None and N > cap:
+                ok = False
+                break
+            if not mem.fits(N, L, S):
+                ok = False
+                break
+            total += est.t_serve(N, L, S)
+        if ok:
+            best = min(best, total)
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 512), min_size=1, max_size=8),
+       st.sampled_from([8, 64, 128]))
+def test_dp_batcher_is_optimal(lens, S):
+    est = _est()
+    mem = AnalyticMemoryEstimator(delta_bytes=100.0, m_available=3e5, zeta=1.0)
+    batches = dp_batch(_requests(lens), S, est, mem)
+    got = sum(b.est_time for b in batches)
+    want = _brute_force_best(lens, S, est, mem)
+    assert got == pytest.approx(want, rel=1e-9)
+    # every batch respects memory
+    for b in batches:
+        assert mem.fits(b.size, b.input_len, S)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 512), min_size=1, max_size=10))
+def test_dp_batcher_partitions_exactly(lens):
+    est = _est()
+    mem = AnalyticMemoryEstimator(delta_bytes=100.0, m_available=5e5)
+    reqs = _requests(lens)
+    batches = dp_batch(reqs, 64, est, mem)
+    seen = sorted(r.rid for b in batches for r in b.requests)
+    assert seen == sorted(r.rid for r in reqs)
+    # contiguity in sorted order: batch input length = max member length
+    for b in batches:
+        assert b.input_len == max(r.effective_input_len for r in b.requests)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 256), min_size=1, max_size=8),
+       st.integers(1, 4))
+def test_dp_with_cap_respects_cap_and_optimality(lens, cap):
+    est = _est()
+    mem = AnalyticMemoryEstimator(delta_bytes=10.0, m_available=1e6)
+    batches = dp_batch(_requests(lens), 32, est, mem, max_batch_size=cap)
+    assert all(b.size <= cap for b in batches)
+    want = _brute_force_best(lens, 32, est, mem, cap=cap)
+    got = sum(b.est_time for b in batches)
+    assert got == pytest.approx(want, rel=1e-9)
+
+
+def test_separate_batching_beats_padding_together():
+    """Paper Fig. 11: 15 short + 1 long is better served as two batches
+    (measured with HF-transformers in the paper)."""
+    est = a100_llama13b_hf_profile()
+    mem = AnalyticMemoryEstimator(delta_bytes=819200.0, m_available=50e9)
+    reqs = _requests([10] * 15 + [1024])
+    batches = dp_batch(reqs, 128, est, mem)
+    assert len(batches) >= 2  # the long request must be split off
+    together = est.t_serve(16, 1024, 128)
+    assert sum(b.est_time for b in batches) < together
+
+
+def test_fcfs_batching_is_arrival_ordered():
+    reqs = [Request(rid=i, arrival=float(10 - i), input_len=8, gen_len=4)
+            for i in range(6)]
+    batches = fcfs_batch(reqs, 4, 16)
+    assert [r.rid for r in batches[0].requests] == [5, 4, 3, 2]
+
+
+# ---------------------------------------------------------------------------
+# offloader (max-min, Eq. 11)
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=30),
+       st.integers(2, 8))
+def test_maxmin_load_gap_bounded(times, n_workers):
+    off = MaxMinOffloader(n_workers)
+    batches = [Batch(requests=[], input_len=1, slice_len=1, est_time=t)
+               for t in times]
+    off.assign(batches)
+    loads = list(off.loads.values())
+    # LPT bound: gap between max and min load <= largest job
+    assert max(loads) - min(loads) <= max(times) + 1e-9
+
+
+def test_maxmin_beats_round_robin_on_skewed_load():
+    times = [100.0, 1.0, 1.0, 1.0, 100.0, 1.0, 1.0, 1.0]
+    mm, rr = MaxMinOffloader(2), RoundRobinOffloader(2)
+    bs = lambda: [Batch(requests=[], input_len=1, slice_len=1, est_time=t) for t in times]
+    mm.assign(bs())
+    rr.assign(bs())
+    gap = lambda o: max(o.loads.values()) - min(o.loads.values())
+    assert gap(mm) < gap(rr)
+
+
+def test_completion_subtracts_estimate():
+    off = MaxMinOffloader(2)
+    off.assign([Batch(requests=[], input_len=1, slice_len=1, est_time=5.0)])
+    w = max(off.loads, key=off.loads.get)
+    off.on_batch_complete(w, 5.0)
+    assert off.loads[w] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# adaptive interval (Eq. 12)
+# ---------------------------------------------------------------------------
+def test_interval_floor_and_scaling():
+    assert next_interval(0.0, 0.5, 3.0) == 3.0     # Γ floor
+    assert next_interval(100.0, 0.5, 3.0) == 50.0  # λ · min load
+
+
+# ---------------------------------------------------------------------------
+# strategy presets
+# ---------------------------------------------------------------------------
+def test_strategy_presets_match_paper_ablation():
+    s = {n: make_strategy(n) for n in ALL_STRATEGIES}
+    assert not s["sls"].slices and s["so"].slices
+    assert s["sls"].mode == "perreq" and s["ils"].mode == "continuous"
+    assert s["pm"].dp_cap is not None and s["ab"].dp_cap is None
+    assert s["lb"].offload == "maxmin" and s["ab"].offload == "rr"
+    assert s["scls"].adaptive_interval and not s["lb"].adaptive_interval
