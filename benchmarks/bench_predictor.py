@@ -1,0 +1,88 @@
+"""Length-prediction sweep: SCLS vs SCLS-PRED vs ORACLE (repro.predict).
+
+  PYTHONPATH=src python -m benchmarks.bench_predictor [--full]
+
+Runs the cluster simulator in a memory-constrained regime (where KV
+capacity binds the batch size, so knowing generation lengths pays the
+most — the S³ setting) on both paper workloads, comparing:
+
+  scls            — length-blind slice-level scheduling (the paper);
+  scls-pred:hist  — online KM-histogram predictor + quantile calibration;
+  scls-pred:proxy — online JAX proxy-MLP predictor (arXiv 2404.08509
+                    style; on synthetic traces the prompt carries no
+                    length signal, so this shows API + training cost,
+                    not predictive headroom);
+  oracle          — perfect predictions: the upper bound.
+
+Expected shape: throughput(scls) < throughput(scls-pred:hist) <
+throughput(oracle), with invalid-token rates dropping in the same order.
+"""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import DURATION, emit, fitted_estimator
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.trace import WORKLOADS, generate_trace
+from repro.core.estimator import a100_llama13b_profile
+from repro.core.memory import AnalyticMemoryEstimator, LLAMA2_13B_DELTA
+from repro.core.schedulers import make_strategy
+
+# memory-constrained testbed: ~6 GB KV budget instead of the A100's 50 GB
+MEM_AVAILABLE = 6e9
+RATE = 24.0
+N_WORKERS = 4
+COVERAGE = 0.7
+
+VARIANTS = (
+    ("scls", "scls", {}),
+    ("scls-pred:hist", "scls-pred", {"predictor": "histogram"}),
+    ("scls-pred:proxy", "scls-pred", {"predictor": "proxy"}),
+    ("oracle", "oracle", {}),
+)
+
+
+def bench_predictor(duration: float = None, rate: float = RATE,
+                    n_workers: int = N_WORKERS, seed: int = 1):
+    duration = duration or DURATION
+    true_lat = a100_llama13b_profile()
+    est = fitted_estimator(true_lat)
+    rows = []
+    for wl_name, spec in WORKLOADS.items():
+        trace = generate_trace(rate, duration, spec, seed=seed)
+        for label, strat, kw in VARIANTS:
+            mem = AnalyticMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                          m_available=MEM_AVAILABLE, zeta=0.9)
+            s = make_strategy(strat, slice_len=128, gamma=3.0,
+                              coverage=COVERAGE, **kw)
+            sim = ClusterSimulator(s, n_workers, true_lat, est, mem,
+                                   noise_sigma=0.02, seed=seed + 1)
+            res = sim.run(copy.deepcopy(trace), duration)
+            m = res.metrics
+            total_tokens = sum(r.generated + r.invalid_tokens
+                               for r in res.requests)
+            invalid = sum(r.invalid_tokens for r in res.requests)
+            rows.append({
+                "workload": wl_name,
+                "variant": label,
+                "throughput": round(m.throughput, 4),
+                "invalid_token_rate": round(invalid / max(total_tokens, 1), 4),
+                "avg_invalid_tokens": round(m.avg_invalid_tokens, 2),
+                "avg_schedules": round(m.avg_schedules, 2),
+                "mean_response": round(m.mean_response, 2),
+                "p95_response": round(m.p95_response, 2),
+                "calib_scale": (round(sim.calibrator.scale, 3)
+                                if sim.calibrator else ""),
+                "calib_coverage": (round(sim.calibrator.empirical_coverage(), 3)
+                                   if sim.calibrator else ""),
+            })
+            print(f"[bench_predictor] {wl_name:9s} {label:15s} "
+                  f"thr={m.throughput:6.3f} req/s  "
+                  f"invalid_rate={rows[-1]['invalid_token_rate']:.3f}  "
+                  f"resp={m.mean_response:6.1f}s")
+    emit(rows, "bench_predictor")
+    return rows
+
+
+if __name__ == "__main__":
+    bench_predictor()

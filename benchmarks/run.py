@@ -13,6 +13,7 @@ import time
 
 def main() -> None:
     from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_predictor import bench_predictor
     from benchmarks.bench_roofline import bench_roofline
     from benchmarks.figures import ALL_FIGURES
 
@@ -21,7 +22,8 @@ def main() -> None:
         if a.startswith("--only"):
             only = a.split("=", 1)[1].split(",") if "=" in a else None
 
-    benches = list(ALL_FIGURES) + [bench_kernels, bench_roofline]
+    benches = list(ALL_FIGURES) + [bench_predictor, bench_kernels,
+                                   bench_roofline]
     print("name,us_per_call,derived")
     for fn in benches:
         name = fn.__name__

@@ -24,15 +24,23 @@ from repro.core.offloader import MaxMinOffloader, RoundRobinOffloader
 from repro.core.request import Batch, Request
 from repro.core.schedulers import StrategyConfig
 from repro.engine.static_engine import StaticEngine
+from repro.predict import LengthPredictor, PredictionPipeline
 
 
 class RealCluster:
-    """Central-mode strategies (PM/AB/LB/SCLS) against real engines."""
+    """Central-mode strategies (PM/AB/LB/SCLS and the prediction-aware
+    SCLS-PRED/ORACLE) against real engines."""
 
     def __init__(self, strategy: StrategyConfig, engines: Sequence[StaticEngine],
-                 sched_est: ServingTimeEstimator, mem: MemoryEstimator):
-        assert strategy.mode == "central"
+                 sched_est: ServingTimeEstimator, mem: MemoryEstimator,
+                 predictor: Optional[LengthPredictor] = None):
+        assert strategy.mode in ("central", "pred")
         self.s = strategy
+        # pred mode: the shared pipeline (same code as the simulator)
+        self.pred = (PredictionPipeline(strategy, predictor)
+                     if strategy.mode == "pred" else None)
+        self.predictor = self.pred.predictor if self.pred else None
+        self.calibrator = self.pred.calibrator if self.pred else None
         self.engines = list(engines)
         self.n_workers = len(engines)
         self.est = sched_est
@@ -74,6 +82,9 @@ class RealCluster:
                 r.done = True
                 r.finish_time = t_done
                 r.output_tokens = self.generated_tokens.pop(r.rid)
+                # online-learning feedback on every completed request
+                if self.pred is not None:
+                    self.pred.on_complete(r)
             else:
                 self.pool.append(r)
         self.offloader.on_batch_complete(w, b.est_time)
@@ -96,8 +107,11 @@ class RealCluster:
                 break
             # one scheduling round
             reqs, self.pool = self.pool, []
-            batches = dp_batch(reqs, self.s.slice_len, self.est, self.mem,
-                               max_batch_size=self.s.dp_cap)
+            if self.s.mode == "pred":
+                batches = self.pred.batches(reqs, self.est, self.mem)
+            else:
+                batches = dp_batch(reqs, self.s.slice_len, self.est, self.mem,
+                                   max_batch_size=self.s.dp_cap)
             for w, b in self.offloader.assign(batches):
                 start = max(self.worker_time[w], now)
                 self.worker_time[w] = self._serve_on_worker(w, b, start)

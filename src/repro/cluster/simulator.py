@@ -5,11 +5,15 @@ interval) against workers whose serving time comes from a calibrated
 ground-truth latency model (paper-scale experiments) — the same scheduler
 code that ``repro.launch.serve`` drives against real JAX engines.
 
-Three worker modes mirror the strategy modes (core.schedulers):
+Worker modes mirror the strategy modes (core.schedulers):
   * perreq     — SLS/SO: requests round-robined on arrival; each worker runs
                  FCFS static batches of fixed size from its local queue.
   * central    — PM/AB/LB/SCLS: a central tick fetches the pool, batches,
                  and offloads whole batches to worker queues.
+  * pred       — SCLS-PRED/ORACLE: central tick, but requests are bucketed
+                 by calibrated *predicted* remaining length with per-batch
+                 slice lengths (core.batcher.bucketed_pred_batch); every
+                 completed request is fed back to the online predictor.
   * continuous — ILS: per-iteration join/exit with a conservative
                  parallelism cap (DeepSpeed-FastGen-like).
 
@@ -35,6 +39,7 @@ from repro.core.offloader import MaxMinOffloader, Offloader, RoundRobinOffloader
 from repro.core.request import Batch, Request, bucket_len
 from repro.core.schedulers import StrategyConfig
 from repro.cluster.metrics import RunMetrics, compute_metrics
+from repro.predict import LengthPredictor, PredictionPipeline
 
 
 @dataclasses.dataclass
@@ -63,8 +68,13 @@ class ClusterSimulator:
     def __init__(self, strategy: StrategyConfig, n_workers: int,
                  true_lat: ServingTimeEstimator, sched_est: ServingTimeEstimator,
                  mem: MemoryEstimator, noise_sigma: float = 0.0, seed: int = 0,
-                 ils_span: int = 32):
+                 ils_span: int = 32, predictor: Optional[LengthPredictor] = None):
         self.s = strategy
+        # pred mode: the shared pipeline (same code as the real cluster)
+        self.pred = (PredictionPipeline(strategy, predictor)
+                     if strategy.mode == "pred" else None)
+        self.predictor = self.pred.predictor if self.pred else None
+        self.calibrator = self.pred.calibrator if self.pred else None
         self.n_workers = n_workers
         self.true_lat = true_lat
         self.est = sched_est
@@ -99,7 +109,7 @@ class ClusterSimulator:
     def run(self, requests: Sequence[Request], duration: float) -> SimResult:
         for r in requests:
             self._push(r.arrival, "arrival", r)
-        if self.s.mode in ("central", "cont_scls", "oracle"):
+        if self.s.mode in ("central", "cont_scls", "pred"):
             self._push(0.0, "tick", None)
         while self._events:
             self.now, _, kind, payload = heapq.heappop(self._events)
@@ -114,7 +124,7 @@ class ClusterSimulator:
     # event handlers
     # ------------------------------------------------------------------
     def _on_arrival(self, req: Request):
-        if self.s.mode in ("central", "cont_scls", "oracle"):
+        if self.s.mode in ("central", "cont_scls", "pred"):
             self.pool.append(req)
         elif self.s.mode == "perreq":
             w = self.workers[self._rr]
@@ -150,20 +160,10 @@ class ClusterSimulator:
                 wk.pending.append(b.requests[0])
                 if not wk.busy:
                     self._continuous_step(wk)
-        elif reqs and self.s.mode == "oracle":
-            # perfect length knowledge: bucket by remaining generation
-            # length (pow-2), DP-batch within a bucket, serve each batch
-            # exactly its max remaining iterations (slice_len per batch)
-            buckets = {}
-            for r in reqs:
-                b = 1 << max(0, (r.remaining_gen - 1).bit_length())
-                buckets.setdefault(b, []).append(r)
-            batches = []
-            for gen_cap, group in sorted(buckets.items()):
-                for b in dp_batch(group, gen_cap, self.est, self.mem):
-                    b.slice_len = max(r.remaining_gen for r in b.requests)
-                    b.est_time = self.est.t_serve(b.size, b.input_len, b.slice_len)
-                    batches.append(b)
+        elif reqs and self.s.mode == "pred":
+            # SCLS-PRED / ORACLE: calibrated predicted remaining-length
+            # caps pick the buckets and per-batch slice lengths
+            batches = self.pred.batches(reqs, self.est, self.mem)
             for w, b in self.offloader.assign(batches):
                 wk = self.workers[w]
                 wk.queue.append(b)
@@ -190,9 +190,18 @@ class ClusterSimulator:
             return True
         if any(e[2] == "arrival" for e in self._events):
             return True
-        if any(w.queue or w.busy for w in self.workers):
+        # pending/running cover continuous-mode workers whose admission is
+        # momentarily blocked (busy alone would miss leased-out work)
+        if any(w.queue or w.busy or w.pending or w.running
+               for w in self.workers):
             return True
         return False
+
+    def _feedback(self, req: Request) -> None:
+        """Online-learning hook: every completed request trains the
+        predictor and scores its latest calibrated prediction."""
+        if self.pred is not None:
+            self.pred.on_complete(req)
 
     # ------------------------------------------------------------------
     # static batch serving (perreq + central)
@@ -239,11 +248,12 @@ class ClusterSimulator:
             if r.remaining_gen <= 0:
                 r.done = True
                 r.finish_time = self.now
+                self._feedback(r)
             else:
                 unfinished.append(r)
         self.offloader.on_batch_complete(wid, b.est_time)
         if unfinished:
-            if self.s.mode in ("central", "oracle"):
+            if self.s.mode in ("central", "pred"):
                 self.pool.extend(unfinished)
             else:  # SO: re-send round-robin
                 for r in unfinished:
@@ -315,6 +325,7 @@ class ClusterSimulator:
             if r.remaining_gen <= 0:
                 r.done = True
                 r.finish_time = self.now
+                self._feedback(r)
                 self.offloader.on_batch_complete(
                     w.wid, self._lease_est.pop(r.rid, 0.0))
             elif lease_left <= 0:  # slice lease over -> back to the pool

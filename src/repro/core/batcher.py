@@ -6,10 +6,17 @@ estimated serving time, subject to the no-OOM constraint.  Because requests
 are sorted, request i's input length is the batch input length for any
 batch ending at i, so each DP transition is O(1) via the estimator's closed
 form.
+
+``bucketed_pred_batch`` extends Algorithm 1 with generation-length
+predictions (the ``scls-pred``/ORACLE path): requests predicted to outlive
+a slice are DP-batched exactly like SCLS, while requests predicted to
+finish within one are grouped into geometric remaining-length buckets and
+served with exact per-batch slice lengths.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import math
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.estimator import ServingTimeEstimator
 from repro.core.memory import MemoryEstimator
@@ -61,6 +68,57 @@ def dp_batch(requests: Sequence[Request], slice_len: int,
         batches.append(b)
         i = p
     batches.reverse()
+    return batches
+
+
+def bucketed_pred_batch(requests: Sequence[Request], caps: Dict[int, int],
+                        slice_len: int, est: ServingTimeEstimator,
+                        mem: MemoryEstimator, phi: float = 2.0,
+                        min_slice: int = 16) -> List[Batch]:
+    """Length-prediction-aware batching (``scls-pred`` / refactored ORACLE).
+
+    ``caps[rid]`` is the calibrated remaining-length cap for each request.
+    Requests with cap >= ``slice_len`` form one "long" group scheduled
+    exactly like SCLS (slice = ``slice_len``): under-predictions therefore
+    degrade to plain slice-level scheduling, never to incorrectness.
+    Requests predicted to finish within a slice are bucketed by cap with
+    geometric ratio ``phi`` (bounding the within-batch length spread, hence
+    the invalid tokens, by a factor of ``phi``), DP-batched within each
+    bucket, and served with slice length = the batch's largest cap — so a
+    correctly-predicted request completes in this round with no overshoot
+    beyond the ``min_slice`` floor (perfect predictions use floor 1).
+
+    ``min_slice`` floors the short-bucket slice lengths: an under-predicted
+    request costs a full reschedule (another prefill and another wait for a
+    tick), so serving micro-slices on the word of an imperfect predictor is
+    a bad trade — a few invalid tokens are far cheaper.
+    """
+    if phi <= 1.0:
+        raise ValueError(f"bucket ratio phi must be > 1, got {phi}")
+    if not requests:
+        return []
+    min_slice = max(1, min(min_slice, slice_len))
+    log_phi = math.log(phi)
+    groups: Dict[int, List[Request]] = {}
+    eff: Dict[int, int] = {}
+    for r in requests:
+        c = max(int(caps[r.rid]), min_slice)
+        eff[r.rid] = c
+        if c >= slice_len:
+            key = -1
+        else:
+            key = int(math.ceil(math.log(c) / log_phi))
+        groups.setdefault(key, []).append(r)
+    batches: List[Batch] = []
+    for key, group in sorted(groups.items()):
+        if key == -1:
+            batches.extend(dp_batch(group, slice_len, est, mem))
+            continue
+        bucket_cap = min(slice_len, max(eff[r.rid] for r in group))
+        for b in dp_batch(group, bucket_cap, est, mem):
+            b.slice_len = min(slice_len, max(eff[r.rid] for r in b.requests))
+            b.est_time = est.t_serve(b.size, b.input_len, b.slice_len)
+            batches.append(b)
     return batches
 
 

@@ -14,6 +14,25 @@ Strategies are declarative configs consumed by the cluster runtime
   AB   — PM with the cap lifted: full DP adaptive batching (Algorithm 1).
   LB   — AB + max-min offloading (§4.5).
   SCLS — LB + adaptive schedule interval (§4.6, Eq. 12).
+
+Beyond-paper strategies:
+
+  SCLS-CB   — slice leases on top of continuous batching (§7 Discussion).
+  SCLS-PRED — SCLS + the ``repro.predict`` generation-length subsystem
+         (cf. §6 Related Work: S³/PiA and proxy-model predictors).  At each
+         central tick, every pooled request gets a calibrated remaining-
+         length cap from an online predictor (histogram/EWMA, JAX proxy
+         MLP, or ground truth).  Requests with cap ≥ S are scheduled
+         exactly like SCLS; requests predicted to finish within a slice
+         are bucketed by cap and served with exact per-batch slice lengths
+         (``core.batcher.bucketed_pred_batch``), eliminating most invalid
+         tokens and letting memory-bound workers pack tighter batches.
+         Calibrated caps interact with the slice length S as a *ceiling*:
+         a cap never stretches a serving round beyond S, and a request
+         that outlives its cap is rescheduled like any unfinished slice —
+         so a bad predictor degrades SCLS-PRED to SCLS, never breaks it.
+  ORACLE — SCLS-PRED with a perfect predictor: the analysis upper bound
+         (the price of length-blindness is SCLS's gap to it).
 """
 from __future__ import annotations
 
@@ -37,6 +56,11 @@ class StrategyConfig:
     # ILS conservative memory management
     max_parallel: int = 12
     max_cached_tokens: Optional[int] = None
+    # SCLS-PRED / ORACLE (mode "pred"): generation-length prediction
+    predictor: Optional[str] = None   # "histogram" | "proxy" | "perfect"
+    coverage: float = 0.7             # calibration target quantile
+    bucket_phi: float = 2.0           # geometric short-bucket ratio
+    min_pred_slice: int = 16          # floor for predicted slice lengths
 
     @property
     def slices(self) -> bool:
@@ -45,7 +69,9 @@ class StrategyConfig:
 
 def make_strategy(name: str, slice_len: int = 128, max_gen: int = 1024,
                   fixed_batch_size: int = 12, gamma: float = 3.0,
-                  lam: float = 0.5, max_parallel: int = 12) -> StrategyConfig:
+                  lam: float = 0.5, max_parallel: int = 12,
+                  predictor: str = "histogram", coverage: float = 0.7,
+                  bucket_phi: float = 2.0) -> StrategyConfig:
     name = name.lower()
     base = dict(slice_len=slice_len, max_gen=max_gen, gamma=gamma, lam=lam)
     if name == "sls":
@@ -66,14 +92,32 @@ def make_strategy(name: str, slice_len: int = 128, max_gen: int = 1024,
     if name == "scls":
         return StrategyConfig("SCLS", "central", use_dp=True, offload="maxmin",
                               adaptive_interval=True, **base)
+    # predicted-slice floor: scales with S so small-slice setups (e.g. the
+    # reduced serve demo at S=8) still exercise the short buckets instead
+    # of flooring every cap into the long group.  The floor exists to
+    # amortize the reschedule cost of *under*-predictions, so perfect
+    # predictions get none — ORACLE serves exact slices (zero overshoot)
+    min_pred_slice = 1 if predictor == "perfect" else max(
+        1, min(16, slice_len // 8))
+    if name == "scls-pred":
+        # SCLS + online length prediction (repro.predict): bucket by
+        # calibrated predicted remaining length, exact slice lengths for
+        # requests predicted to finish within a slice
+        return StrategyConfig("SCLS-PRED", "pred", use_dp=True,
+                              offload="maxmin", adaptive_interval=True,
+                              predictor=predictor, coverage=coverage,
+                              bucket_phi=bucket_phi,
+                              min_pred_slice=min_pred_slice, **base)
     if name == "oracle":
-        # analysis upper bound (cf. PiA / S^3, paper §6 Related Work): a
-        # perfect generation-length predictor — requests are grouped by
-        # known remaining length (no slicing, no invalid tokens, no
-        # reschedules) and DP-batched within each length bucket.  SCLS's
-        # gap to this bound is the price of length-blindness.
-        return StrategyConfig("ORACLE", "oracle", use_dp=True,
-                              offload="maxmin", adaptive_interval=True, **base)
+        # analysis upper bound (cf. PiA / S^3, paper §6 Related Work):
+        # SCLS-PRED with a perfect generation-length predictor — requests
+        # are bucketed by exactly-known remaining length, short requests
+        # finish in one exact slice with zero overshoot.  SCLS's gap to
+        # this bound is the price of length-blindness.
+        return StrategyConfig("ORACLE", "pred", use_dp=True,
+                              offload="maxmin", adaptive_interval=True,
+                              predictor="perfect", coverage=coverage,
+                              bucket_phi=bucket_phi, min_pred_slice=1, **base)
     if name == "scls-cb":
         # beyond-paper (§7 Discussion): slice-level scheduling ON TOP OF
         # continuous batching — requests get S-token *leases* on a worker,
@@ -86,4 +130,5 @@ def make_strategy(name: str, slice_len: int = 128, max_gen: int = 1024,
     raise ValueError(f"unknown strategy {name!r}")
 
 
-ALL_STRATEGIES = ("sls", "ils", "so", "pm", "ab", "lb", "scls", "scls-cb")
+ALL_STRATEGIES = ("sls", "ils", "so", "pm", "ab", "lb", "scls", "scls-cb",
+                  "scls-pred", "oracle")

@@ -1,0 +1,18 @@
+"""Version-compat shims for the Pallas TPU API surface."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<=0.4.x names it TPUCompilerParams; newer releases CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def compiler_params(**kwargs):
+    """Build TPU compiler params for ``pl.pallas_call`` across jax versions."""
+    if _CompilerParams is None:  # pragma: no cover
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; this jax version is unsupported (need "
+            ">=0.4.36)")
+    return _CompilerParams(**kwargs)

@@ -3,6 +3,10 @@
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --workers 2 --rate 2 --duration 15 --strategy scls
 
+  # prediction-aware scheduling (repro.predict): online histogram predictor
+  PYTHONPATH=src python -m repro.launch.serve --strategy scls-pred \
+      --predictor histogram --coverage 0.7
+
 Profiles the engine, fits the Eq. 3/4 estimator, then drives the DP
 batcher + max-min offloader over in-process workers (virtual-time clocks;
 every token really computed).  On a real TPU cluster each worker becomes a
@@ -25,6 +29,11 @@ from repro.core.schedulers import ALL_STRATEGIES, make_strategy
 from repro.engine.profiler import fit_estimator
 from repro.engine.static_engine import StaticEngine
 from repro.models.registry import get_model
+from repro.predict import PREDICTORS
+
+# RealCluster drives central-tick strategies (incl. prediction-aware ones)
+_SERVABLE = [s for s in ALL_STRATEGIES
+             if make_strategy(s).mode in ("central", "pred")]
 
 
 def main():
@@ -34,12 +43,17 @@ def main():
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--duration", type=float, default=15.0)
-    ap.add_argument("--strategy", default="scls",
-                    choices=[s for s in ALL_STRATEGIES if s not in ("sls", "so", "ils")])
+    ap.add_argument("--strategy", default="scls", choices=_SERVABLE)
+    ap.add_argument("--predictor", default="histogram", choices=list(PREDICTORS),
+                    help="length predictor for --strategy scls-pred")
+    ap.add_argument("--coverage", type=float, default=0.7,
+                    help="calibration target quantile for predicted caps")
     ap.add_argument("--slice-len", type=int, default=8)
     ap.add_argument("--max-gen", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if not 0.0 < args.coverage < 1.0:
+        ap.error("--coverage must be in (0, 1)")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if cfg.family not in ("dense", "moe", "ssm", "hybrid"):
@@ -63,10 +77,15 @@ def main():
     engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)
                for _ in range(args.workers)]
     strategy = make_strategy(args.strategy, slice_len=args.slice_len,
-                             max_gen=args.max_gen, gamma=0.25)
+                             max_gen=args.max_gen, gamma=0.25,
+                             predictor=args.predictor, coverage=args.coverage)
     cluster = RealCluster(strategy, engines, est, mem)
     metrics = cluster.run(trace, args.duration)
     print(json.dumps(dataclasses.asdict(metrics), indent=2))
+    if cluster.predictor is not None:
+        print(f"[serve] predictor={cluster.predictor.name} "
+              f"calibration scale={cluster.calibrator.scale:.2f} "
+              f"coverage={cluster.calibrator.empirical_coverage():.2f}")
     done = [r for r in trace if r.done]
     print(f"[serve] completed {len(done)}/{len(trace)}; "
           f"sample output ({done[0].rid}): {done[0].output_tokens[:12]}")

@@ -1,0 +1,26 @@
+"""Shared test fixtures/helpers."""
+import pytest
+
+
+def optional_hypothesis():
+    """Import hypothesis, degrading gracefully when absent: property tests
+    skip but the rest of the module still collects and runs.
+
+    Usage::
+
+        from conftest import optional_hypothesis
+        given, settings, st = optional_hypothesis()
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        def _skip(*_a, **_k):
+            return pytest.mark.skip(reason="hypothesis not installed "
+                                           "(see requirements.txt)")
+
+        class _StrategyStub:
+            def __getattr__(self, _name):
+                return lambda *a, **k: None
+
+        return _skip, _skip, _StrategyStub()

@@ -1,0 +1,263 @@
+"""Tests for the generation-length prediction subsystem (repro.predict):
+calibration coverage, histogram convergence, and the simulator end-to-end
+ordering SCLS <= SCLS-PRED <= ORACLE (with SCLS-PRED + PerfectPredictor
+identical to ORACLE by construction)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.trace import CODEFUSE, SHAREGPT, generate_trace
+from repro.core.batcher import bucketed_pred_batch
+from repro.core.estimator import ServingTimeEstimator, a100_llama13b_profile
+from repro.core.memory import AnalyticMemoryEstimator, LLAMA2_13B_DELTA
+from repro.core.request import Request
+from repro.core.schedulers import make_strategy
+from repro.predict import (HistogramPredictor, PerfectPredictor,
+                           QuantileCalibrator, make_predictor)
+
+
+def _completed(rid, total, input_len=8):
+    """A finished request: ``generated`` holds the realized total length."""
+    return Request(rid=rid, arrival=0.0, input_len=input_len, gen_len=total,
+                   generated=total)
+
+
+def _lognormal_totals(n, mu=4.6, sigma=1.0, max_gen=1024, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.clip(np.round(rng.lognormal(mu, sigma, n)), 1, max_gen).astype(int)
+
+
+# ---------------------------------------------------------------------------
+# predictors
+# ---------------------------------------------------------------------------
+def test_perfect_predictor_reads_ground_truth():
+    p = PerfectPredictor()
+    r = Request(rid=0, arrival=0.0, input_len=4, gen_len=300, generated=100)
+    assert p.predict_remaining(r) == 200.0
+
+
+def test_histogram_predictor_converges_to_quantiles():
+    """Trained on a lognormal stream, the histogram's raw predictions hit
+    their target quantile on held-out data (unconditional and conditional)."""
+    totals = _lognormal_totals(4000)
+    train, held = totals[:2000], totals[2000:]
+    for q in (0.5, 0.7, 0.9):
+        h = HistogramPredictor(max_gen=1024, quantile=q)
+        for i, t in enumerate(train):
+            h.observe(_completed(i, int(t)))
+        cov0 = np.mean(held <= h.predict_total(0))
+        assert abs(cov0 - q) < 0.07, (q, cov0)
+        survivors = held[held > 128]
+        cov128 = np.mean(survivors <= h.predict_total(128))
+        assert abs(cov128 - q) < 0.07, (q, cov128)
+
+
+def test_histogram_conditional_hazard_adapts():
+    """Having survived g tokens must raise the predicted total (lognormal
+    hazard: long requests keep going)."""
+    h = HistogramPredictor(max_gen=1024, quantile=0.5)
+    for i, t in enumerate(_lognormal_totals(2000)):
+        h.observe(_completed(i, int(t)))
+    assert h.predict_total(256) > h.predict_total(64) > h.predict_total(0)
+
+
+def test_histogram_cold_start_falls_back_to_max_gen():
+    h = HistogramPredictor(max_gen=512, min_observed=8)
+    r = Request(rid=0, arrival=0.0, input_len=4, gen_len=10)
+    # under-trained: predict the full budget so scls-pred degrades to scls
+    assert h.predict_remaining(r) == 512.0
+
+
+def test_histogram_censored_evidence_counts():
+    """In-flight requests contribute survival mass: a stream of completions
+    at 64 plus many still-running requests past 512 must push the median
+    prediction above the completions-only answer."""
+    biased = HistogramPredictor(max_gen=1024, quantile=0.5)
+    debiased = HistogramPredictor(max_gen=1024, quantile=0.5)
+    for i in range(50):
+        biased.observe(_completed(i, 64))
+        debiased.observe(_completed(i, 64))
+    for i in range(50):  # long requests, still generating
+        alive = Request(rid=1000 + i, arrival=0.0, input_len=4,
+                        gen_len=1024, generated=512)
+        debiased.observe_alive(alive)
+    assert debiased.predict_total(0) > biased.predict_total(0)
+
+
+def test_proxy_predictor_trains_online():
+    proxy = make_predictor("proxy", max_gen=1024)
+    rng = np.random.default_rng(0)
+    totals = _lognormal_totals(300, seed=3)
+    for i, t in enumerate(totals):
+        r = _completed(i, int(t), input_len=int(rng.integers(4, 64)))
+        proxy.observe(r)
+    fresh = Request(rid=9999, arrival=0.0, input_len=16, gen_len=100)
+    pred = proxy.predict_remaining(fresh)
+    # learned the scale of the marginal (median ~100): order of magnitude,
+    # not the cold-start extremes
+    assert 20.0 <= pred <= 600.0
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+def test_calibration_coverage_on_heldout_lognormal():
+    """Calibrated caps achieve >= target coverage on held-out traffic even
+    when the raw predictor is biased low (here: a constant under-guess)."""
+
+    class HalfMedian(HistogramPredictor):
+        def predict_remaining(self, req):
+            return 50.0  # systematically under-predicts (true median ~100)
+
+    for target in (0.6, 0.8):
+        pred = HalfMedian(max_gen=1024)
+        calib = QuantileCalibrator(coverage=target, window=2000)
+        totals = _lognormal_totals(3000, seed=1)
+        caps = []
+        for i, t in enumerate(totals):
+            r = Request(rid=i, arrival=0.0, input_len=8, gen_len=int(t))
+            caps.append((calib.cap(r, pred.predict_remaining(r)), int(t), i))
+            r.generated = int(t)
+            calib.observe(r)
+        # held-out = second half (scale has converged by then)
+        hits = [c >= t for c, t, i in caps[1500:]]
+        cov = float(np.mean(hits))
+        assert cov >= target - 0.05, (target, cov)
+        assert calib.scale > 1.0  # it actually corrected the bias
+
+
+def test_calibration_is_identity_for_perfect_predictions():
+    pred = PerfectPredictor()
+    calib = QuantileCalibrator(coverage=0.9)
+    totals = _lognormal_totals(500, seed=2)
+    for i, t in enumerate(totals):
+        r = Request(rid=i, arrival=0.0, input_len=8, gen_len=int(t))
+        cap = calib.cap(r, pred.predict_remaining(r))
+        assert cap == int(t)  # caps pass through exactly
+        r.generated = int(t)
+        calib.observe(r)
+    assert calib.scale == pytest.approx(1.0)
+
+
+def test_calibration_scores_every_prediction_point():
+    calib = QuantileCalibrator(coverage=0.5)
+    r = Request(rid=0, arrival=0.0, input_len=8, gen_len=300)
+    calib.cap(r, 10.0)     # under-prediction at g=0
+    r.generated = 100
+    calib.cap(r, 200.0)    # exact at g=100
+    r.generated = 300
+    calib.observe(r)
+    assert len(calib.ratios) == 2
+    assert max(calib.ratios) == pytest.approx(30.0)  # 300 / 10
+
+
+# ---------------------------------------------------------------------------
+# prediction-aware batching
+# ---------------------------------------------------------------------------
+def _est():
+    true_lat = a100_llama13b_profile()
+    rng = np.random.default_rng(0)
+    pre = [(N, L, true_lat.t_prefill(N, L)) for N in (1, 4, 16)
+           for L in (16, 128, 1024)]
+    dec = [(N, L, true_lat.tau_decode(L, N)) for N in (1, 4, 16)
+           for L in (16, 128, 1024)]
+    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    return est
+
+
+def test_bucketed_pred_batch_groups_and_caps():
+    est = _est()
+    mem = AnalyticMemoryEstimator(delta_bytes=1000.0, m_available=1e9)
+    reqs = [Request(rid=i, arrival=0.0, input_len=32, gen_len=1000)
+            for i in range(6)]
+    caps = {0: 4, 1: 20, 2: 30, 3: 200, 4: 500, 5: 90}
+    batches = bucketed_pred_batch(reqs, caps, 128, est, mem, min_slice=16)
+    by_rid = {r.rid: b for b in batches for r in b.requests}
+    # long-class requests (cap >= S) are served at exactly the SCLS slice
+    assert by_rid[3].slice_len == 128 and by_rid[4].slice_len == 128
+    # short-class slices never exceed S and respect the floor
+    for rid in (0, 1, 2, 5):
+        assert 16 <= by_rid[rid].slice_len <= 128
+    # a short request's slice covers its own cap (no self-truncation)
+    assert by_rid[5].slice_len >= 90
+    # every request is scheduled exactly once
+    assert sorted(r.rid for b in batches for r in b.requests) == list(range(6))
+
+
+def test_bucketed_pred_batch_rejects_degenerate_phi():
+    est = _est()
+    mem = AnalyticMemoryEstimator(delta_bytes=1000.0, m_available=1e9)
+    reqs = [Request(rid=0, arrival=0.0, input_len=32, gen_len=100)]
+    with pytest.raises(ValueError, match="phi"):
+        bucketed_pred_batch(reqs, {0: 4}, 128, est, mem, phi=1.0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the SCLS -> SCLS-PRED -> ORACLE ladder
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def pred_env():
+    true_lat = a100_llama13b_profile()
+    rng = np.random.default_rng(0)
+    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    return true_lat, est
+
+
+def _run_pred(pred_env, name, trace, duration, **kw):
+    true_lat, est = pred_env
+    # memory-constrained regime: KV capacity binds the batch size, so
+    # length knowledge pays (the S³ setting)
+    mem = AnalyticMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                  m_available=5e9, zeta=0.9)
+    s = make_strategy(name, slice_len=128, gamma=3.0, coverage=0.7, **kw)
+    sim = ClusterSimulator(s, 4, true_lat, est, mem, seed=2)
+    return sim.run(copy.deepcopy(trace), duration).metrics
+
+
+@pytest.mark.parametrize("spec", [CODEFUSE, SHAREGPT], ids=lambda s: s.name)
+def test_scls_pred_between_scls_and_oracle(pred_env, spec):
+    """Acceptance ladder on both paper workloads: the online histogram
+    predictor lands strictly between length-blind SCLS and the perfect
+    ORACLE, with fewer invalid tokens than SCLS."""
+    trace = generate_trace(24.0, 120.0, spec, seed=1)
+    scls = _run_pred(pred_env, "scls", trace, 120.0)
+    pred = _run_pred(pred_env, "scls-pred", trace, 120.0)
+    oracle = _run_pred(pred_env, "oracle", trace, 120.0)
+    assert scls.n_completed == scls.n_requests
+    assert pred.n_completed == pred.n_requests
+    assert oracle.n_completed == oracle.n_requests
+    assert scls.throughput < pred.throughput < oracle.throughput
+    assert pred.avg_invalid_tokens < scls.avg_invalid_tokens
+    assert oracle.avg_invalid_tokens < scls.avg_invalid_tokens
+
+
+def test_perfect_predictor_reproduces_oracle(pred_env):
+    """ORACLE is literally scls-pred + PerfectPredictor: identical runs."""
+    trace = generate_trace(12.0, 60.0, CODEFUSE, seed=3)
+    oracle = _run_pred(pred_env, "oracle", trace, 60.0)
+    perfect = _run_pred(pred_env, "scls-pred", trace, 60.0,
+                        predictor="perfect")
+    assert perfect.throughput == pytest.approx(oracle.throughput)
+    assert perfect.avg_invalid_tokens == pytest.approx(
+        oracle.avg_invalid_tokens)
+
+
+def test_predictor_feedback_loop_runs(pred_env):
+    """The simulator trains the predictor online: after a run the histogram
+    has seen every completed request and calibration has scored them."""
+    true_lat, est = pred_env
+    mem = AnalyticMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                  m_available=5e9, zeta=0.9)
+    trace = generate_trace(6.0, 60.0, CODEFUSE, seed=4)
+    s = make_strategy("scls-pred", slice_len=128, gamma=3.0)
+    sim = ClusterSimulator(s, 2, true_lat, est, mem, seed=5)
+    res = sim.run(copy.deepcopy(trace), 60.0)
+    assert sim.predictor.n_observed == res.metrics.n_completed
+    assert len(sim.calibrator.ratios) > 0
+    assert np.isfinite(sim.calibrator.empirical_coverage())

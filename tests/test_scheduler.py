@@ -3,7 +3,10 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core.batcher import dp_batch, fcfs_batch
 from repro.core.estimator import (LatencyCoeffs, ServingTimeEstimator,
@@ -241,3 +244,8 @@ def test_strategy_presets_match_paper_ablation():
     assert s["pm"].dp_cap is not None and s["ab"].dp_cap is None
     assert s["lb"].offload == "maxmin" and s["ab"].offload == "rr"
     assert s["scls"].adaptive_interval and not s["lb"].adaptive_interval
+    # prediction-aware strategies (repro.predict)
+    assert s["scls-pred"].mode == "pred" and s["oracle"].mode == "pred"
+    assert s["scls-pred"].predictor == "histogram"
+    assert s["oracle"].predictor == "perfect"
+    assert make_strategy("scls-pred", predictor="proxy").predictor == "proxy"
