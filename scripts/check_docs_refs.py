@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Docs reference checker (CI docs job).
+
+Asserts that every ``path.py:Symbol`` reference in the docs actually
+resolves — the file exists AND the symbol imports — and that every local
+markdown link points at an existing file.  Keeps docs/paper_map.md and
+docs/architecture.md honest as the code evolves.
+
+  PYTHONPATH=src python scripts/check_docs_refs.py [files...]
+
+With no arguments, checks every ``*.md`` under docs/ plus README.md.
+Exits non-zero listing all stale references.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# `src/repro/core/memory.py:AnalyticMemoryEstimator.kv_bytes` inside backticks
+REF_RE = re.compile(r"`([\w/.-]+\.py):([A-Za-z_][\w.]*)`")
+# [text](local/path.md) — skip URLs and intra-page anchors
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#]+?)(?:#[^)]*)?\)")
+
+
+def module_name(path: str) -> str:
+    p = pathlib.PurePosixPath(path)
+    parts = p.with_suffix("").parts
+    if parts[0] == "src":
+        parts = parts[1:]
+    return ".".join(parts)
+
+
+def check_symbol_ref(path: str, symbol: str) -> str | None:
+    """Returns an error string, or None when the reference resolves."""
+    if not (REPO / path).is_file():
+        return f"file does not exist: {path}"
+    try:
+        mod = importlib.import_module(module_name(path))
+    except Exception as e:  # noqa: BLE001 — any import failure is a doc bug
+        return f"cannot import {module_name(path)}: {e!r}"
+    obj = mod
+    for attr in symbol.split("."):
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return f"{module_name(path)} has no symbol {symbol!r}"
+    return None
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    text = md.read_text()
+    errors = []
+    for path, symbol in REF_RE.findall(text):
+        err = check_symbol_ref(path, symbol)
+        if err:
+            errors.append(f"{md.relative_to(REPO)}: `{path}:{symbol}` — {err}")
+    for target in LINK_RE.findall(text):
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        resolved = (md.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [pathlib.Path(a).resolve() for a in argv]
+    else:
+        files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    errors = []
+    n_refs = 0
+    for md in files:
+        n_refs += len(REF_RE.findall(md.read_text()))
+        errors.extend(check_file(md))
+    if errors:
+        print(f"[check_docs_refs] {len(errors)} stale reference(s):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"[check_docs_refs] OK: {n_refs} symbol refs across "
+          f"{len(files)} files resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -19,11 +19,12 @@ from repro.cluster.metrics import RunMetrics, compute_metrics
 from repro.core.batcher import dp_batch
 from repro.core.estimator import ServingTimeEstimator
 from repro.core.interval import next_interval
-from repro.core.memory import MemoryEstimator
+from repro.core.memory import MemoryEstimator, PagedMemoryEstimator
 from repro.core.offloader import MaxMinOffloader, RoundRobinOffloader
 from repro.core.request import Batch, Request
 from repro.core.schedulers import StrategyConfig
 from repro.engine.static_engine import StaticEngine
+from repro.kvcache import PageAllocator
 from repro.predict import LengthPredictor, PredictionPipeline
 
 
@@ -48,6 +49,26 @@ class RealCluster:
         self.offloader = (MaxMinOffloader(self.n_workers)
                           if strategy.offload == "maxmin"
                           else RoundRobinOffloader(self.n_workers))
+        # kv_layout="paged": each worker machine gets a real page allocator;
+        # a scheduled slice reserves every member's (L_i + S) envelope at
+        # slice start and frees it at slice end, so the DP batcher's no-OOM
+        # constraint (block-counting fits()) is enforced by an actual free
+        # list rather than assumed
+        self.allocators: Optional[List[PageAllocator]] = None
+        if strategy.kv_layout == "paged":
+            if not isinstance(mem, PagedMemoryEstimator):
+                raise TypeError("kv_layout='paged' needs a PagedMemoryEstimator")
+            if mem.bucket % sched_est.bucket:
+                # fits() admits with mem.bucket over raw lengths, while the
+                # slice-start reserve charges the batch input length (est-
+                # bucketed); mem.bucket must be a multiple of est.bucket so
+                # admission is at least as conservative as the reserve —
+                # otherwise a legitimately admitted batch can MemoryError
+                raise ValueError(
+                    f"PagedMemoryEstimator.bucket ({mem.bucket}) must be a "
+                    f"multiple of the estimator bucket ({sched_est.bucket})")
+            self.allocators = [PageAllocator(mem.total_blocks, mem.page_tokens)
+                               for _ in self.engines]
         self.pool: List[Request] = []
         self.worker_time = [0.0] * self.n_workers
         self.worker_queue: List[List[Batch]] = [[] for _ in range(self.n_workers)]
@@ -63,8 +84,19 @@ class RealCluster:
         prompts = [r.prompt for r in b.requests]
         prev = [self.generated_tokens.get(r.rid, []) for r in b.requests]
         forced = [r.remaining_gen for r in b.requests]
+        alloc = self.allocators[w] if self.allocators is not None else None
+        if alloc is not None:
+            # slice start: every member holds the batch envelope L_i + S
+            # (rows are padded to the batch input length, as the engine's
+            # per-batch cache is) — MemoryError here means the DP batcher
+            # violated its own no-OOM constraint
+            for r in b.requests:
+                alloc.reserve(r.rid, b.input_len + b.slice_len)
         res = eng.serve_batch(prompts, b.slice_len, forced_gen_lens=forced,
                               already_generated=prev)
+        if alloc is not None:
+            for r in b.requests:  # slice end: envelope freed for the next tick
+                alloc.release(r.rid)
         t_done = start_time + res.wall_time
         self.total_batches += 1
         self.batch_sizes.append(b.size)

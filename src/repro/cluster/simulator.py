@@ -34,7 +34,7 @@ import numpy as np
 from repro.core.batcher import dp_batch, fcfs_batch
 from repro.core.estimator import ServingTimeEstimator
 from repro.core.interval import next_interval
-from repro.core.memory import MemoryEstimator
+from repro.core.memory import MemoryEstimator, PagedMemoryEstimator
 from repro.core.offloader import MaxMinOffloader, Offloader, RoundRobinOffloader
 from repro.core.request import Batch, Request, bucket_len
 from repro.core.schedulers import StrategyConfig
@@ -58,7 +58,7 @@ class _Worker:
         self.wid = wid
         self.queue: deque = deque()       # batches (static modes)
         self.pending: deque = deque()     # requests (perreq/continuous)
-        self.running: list = []           # (req, cached_len) continuous mode
+        self.running: list = []  # [req, cached_len, lease_left, blocks] continuous mode
         self.busy = False
         self.completion_time = 0.0
         self.next_wake = None
@@ -93,6 +93,7 @@ class ClusterSimulator:
         self.batch_sizes: List[int] = []
         self.early_returns = 0
         self.total_batches = 0
+        self.peak_parallel = 0  # max concurrent requests on one worker
         self._lease_est: Dict[int, float] = {}
         self.now = 0.0
 
@@ -270,17 +271,39 @@ class ClusterSimulator:
     # ------------------------------------------------------------------
     # continuous batching (ILS)
     # ------------------------------------------------------------------
+    def _block_charge(self, eff_len: int) -> int:
+        """kv_layout="paged": blocks the joining request's envelope holds —
+        the slice lease S for cont_scls, the length-blind worst case
+        (max_gen remaining) for plain ILS.  Fixed for the request's stay,
+        exactly like the real engine's join-time ``reserve``."""
+        if self.s.kv_layout != "paged":
+            return 0
+        S = (self.s.slice_len if self.s.mode == "cont_scls"
+             else self.s.max_gen)
+        return self.mem.blocks_per_request(eff_len, S)
+
     def _ils_token_budget_ok(self, w: _Worker, newreq: Request) -> bool:
+        if self.s.kv_layout == "paged":
+            # block-granular admission (repro.kvcache): each running
+            # request occupies exactly its reserved envelope rounded up to
+            # pages; the join fits iff the worker's pool has free blocks
+            assert isinstance(self.mem, PagedMemoryEstimator), \
+                "kv_layout='paged' needs a PagedMemoryEstimator"
+            used = sum(blocks for *_, blocks in w.running)
+            charge = self._block_charge(newreq.effective_input_len)
+            return used + charge <= self.mem.total_blocks
         budget = self.s.max_cached_tokens
         if budget is None and self.s.mode == "cont_scls":
             # slices bound per-request growth to eff_len + S, so the exact
-            # memory budget applies (no conservative cap) — Eq. 5/9
+            # memory budget applies (no conservative cap) — Eq. 5/9.
+            # NOTE: this is the *idealized* fragmentation-free allocator;
+            # kv_layout="paged" is the realizable version (block-rounded)
             if hasattr(self.mem, "m_available") and self.mem.delta_bytes > 0:
                 budget = int(self.mem.zeta * self.mem.m_available
                              / self.mem.delta_bytes)
         if budget is None:
             return True
-        tokens = sum(r[1] + self.s.slice_len for r in w.running)
+        tokens = sum(c + self.s.slice_len for _, c, _, _ in w.running)
         return tokens + newreq.effective_input_len + self.s.slice_len <= budget
 
     def _continuous_step(self, w: _Worker):
@@ -294,17 +317,19 @@ class ClusterSimulator:
             dur += self.true_lat.t_prefill(1, r.effective_input_len) * self._noise()
             r.n_schedules += 1
             w.running.append([r, r.effective_input_len,
-                              self.s.slice_len if lease else (1 << 30)])
+                              self.s.slice_len if lease else (1 << 30),
+                              self._block_charge(r.effective_input_len)])
         if not w.running:
             w.busy = False
             return
         w.busy = True
         span = min(self.ils_span,
                    min(min(r.remaining_gen, lease_left)
-                       for r, _, lease_left in w.running))
+                       for r, _, lease_left, _ in w.running))
         span = max(span, 1)
         N = len(w.running)
-        avg_len = float(np.mean([c for _, c, _ in w.running]))
+        self.peak_parallel = max(self.peak_parallel, N)
+        avg_len = float(np.mean([c for _, c, _, _ in w.running]))
         # Σ_{i=1..span} τ(avg+i, N) ≈ span · τ(avg + span/2, N)
         dur += span * self.true_lat.tau_decode(avg_len + span / 2.0, N) * self._noise()
         self._push(self.now + dur, "cont_done", (w.wid, span, N))
@@ -317,7 +342,7 @@ class ClusterSimulator:
         self.total_batches += 1
         still = []
         expired = []
-        for r, c, lease_left in w.running:
+        for r, c, lease_left, blocks in w.running:
             r.generated += span
             lease_left -= span
             if r.first_token_time is None:
@@ -333,7 +358,7 @@ class ClusterSimulator:
                 self.offloader.on_batch_complete(
                     w.wid, self._lease_est.pop(r.rid, 0.0))
             else:
-                still.append([r, c + span, lease_left])
+                still.append([r, c + span, lease_left, blocks])
         w.running = still
         if expired:
             self.pool.extend(expired)

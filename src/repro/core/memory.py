@@ -1,12 +1,16 @@
 """Memory-usage estimator (paper §4.3, Eq. 5–9 + Algorithm 2).
 
-Two implementations, as in the paper:
+Three implementations:
   * AnalyticMemoryEstimator — Eq. 5/9: KV bytes = (L_i + S)·N·Δ ≤ ζ·M_ava,
     for engines with predictable allocators (HF in the paper; our JAX engine
     is exactly predictable, so ζ defaults to 1.0 there).  Mesh-aware: Δ is
     per model-shard (DESIGN.md §8.3).
   * RuleBasedMemoryEstimator — Algorithm 2's profiled rule table for engines
     with opaque allocators (DS in the paper).
+  * PagedMemoryEstimator — beyond-paper: the block-pool view of the same
+    budget for ``kv_layout="paged"`` engines (``repro.kvcache``), counting
+    *free blocks* instead of the ζ·M_ava closed form, so in-flight
+    reservations shrink what the batcher may admit.
 """
 from __future__ import annotations
 
@@ -15,18 +19,35 @@ from typing import List, Sequence, Tuple
 
 from repro.core.request import bucket_len
 
+# Documented ceiling for ``max_batch_size`` when the memory model does not
+# bind (e.g. Δ = 0, or a rule table whose last rule always fits): no real
+# engine schedules batches beyond this, and callers must never see an
+# internal search sentinel leak out as if it were a schedulable size.
+MAX_BATCH_SIZE_CAP = 4096
+
+
+def blocks_for(n_tokens: int, page_tokens: int) -> int:
+    """Blocks needed for ``n_tokens`` cache slots (ceil division).
+
+    THE block-rounding rule of the paged KV subsystem: the estimator's
+    admission check, the ``repro.kvcache.PageAllocator`` free list, and
+    the simulator's admission all share this one definition.
+    """
+    return -(-max(n_tokens, 0) // page_tokens)
+
 
 class MemoryEstimator:
     def fits(self, N: int, L_i: int, S: int) -> bool:
         raise NotImplementedError
 
     def max_batch_size(self, L_i: int, S: int) -> int:
-        """Largest N with fits(N, L_i, S) — Eq. 8 for the analytic case."""
-        lo, hi = 0, 1
-        while self.fits(hi, L_i, S):
-            hi *= 2
-            if hi > 1 << 20:
-                return hi
+        """Largest N with fits(N, L_i, S) — Eq. 8 for the analytic case.
+
+        Capped at ``MAX_BATCH_SIZE_CAP`` when the constraint never binds.
+        """
+        if self.fits(MAX_BATCH_SIZE_CAP, L_i, S):
+            return MAX_BATCH_SIZE_CAP
+        lo, hi = 0, MAX_BATCH_SIZE_CAP
         while hi - lo > 1:
             mid = (lo + hi) // 2
             if self.fits(mid, L_i, S):
@@ -54,8 +75,9 @@ class AnalyticMemoryEstimator(MemoryEstimator):
     def max_batch_size(self, L_i: int, S: int) -> int:  # Eq. 8 closed form
         denom = self.delta_bytes * (bucket_len(L_i, self.bucket) + S)
         if denom <= 0:
-            return 1 << 20
-        return int(self.zeta * self.m_available // denom)
+            return MAX_BATCH_SIZE_CAP
+        return min(int(self.zeta * self.m_available // denom),
+                   MAX_BATCH_SIZE_CAP)
 
 
 @dataclasses.dataclass
@@ -74,6 +96,74 @@ class RuleBasedMemoryEstimator(MemoryEstimator):
             if L > threshold:
                 return N <= max_n
         return N <= self.rules[-1][1]
+
+
+@dataclasses.dataclass
+class PagedMemoryEstimator(MemoryEstimator):
+    """Block-pool memory model for ``kv_layout="paged"`` (``repro.kvcache``).
+
+    The same ζ·M_ava byte budget as the analytic model, viewed as a pool of
+    fixed-size token blocks: a request scheduled with batch input length
+    L_i and slice S occupies ⌈(L_i + S)/pg⌉ blocks (Eq. 5 rounded up to
+    block granularity).  Unlike the closed form, ``max_batch_size`` counts
+    *currently free* blocks.
+
+    ``reserve_batch`` / ``release_blocks`` track in-flight slices for
+    runtimes that overlap batch execution on one machine.  The current
+    cluster runtimes serve one batch per worker at a time (RealCluster
+    additionally enforces the envelope with a real per-worker
+    ``repro.kvcache.PageAllocator``), so they admit via ``fits`` alone and
+    ``reserved_blocks`` stays 0 there — any future overlapped-execution
+    runtime must reserve around each in-flight slice or it will
+    over-admit.
+    """
+
+    delta_bytes: float          # Δ: KV bytes per token (per model shard)
+    m_available: float          # M_ava = M_cap - M_model - M_engine (bytes)
+    page_tokens: int = 16       # block size in cache slots
+    zeta: float = 1.0           # engine fragmentation factor (Eq. 9)
+    bucket: int = 1
+
+    def __post_init__(self):
+        bytes_per_block = self.page_tokens * self.delta_bytes
+        self.total_blocks = (int(self.zeta * self.m_available
+                                 // bytes_per_block)
+                             if bytes_per_block > 0 else 0)
+        self.reserved_blocks = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return self.total_blocks - self.reserved_blocks
+
+    def blocks_per_request(self, L_i: int, S: int) -> int:
+        return blocks_for(bucket_len(L_i, self.bucket) + S, self.page_tokens)
+
+    def fits(self, N: int, L_i: int, S: int) -> bool:
+        if N <= 0:
+            return True
+        if self.total_blocks == 0:  # Δ = 0: memory model cannot bind
+            return N <= MAX_BATCH_SIZE_CAP
+        return N * self.blocks_per_request(L_i, S) <= self.free_blocks
+
+    def max_batch_size(self, L_i: int, S: int) -> int:
+        """Counts free blocks — NOT the ζ·M_ava closed form."""
+        if self.total_blocks == 0:
+            return MAX_BATCH_SIZE_CAP
+        return min(self.free_blocks // self.blocks_per_request(L_i, S),
+                   MAX_BATCH_SIZE_CAP)
+
+    # ------------------------------------------------------------------
+    # in-flight accounting (cluster runtimes)
+    # ------------------------------------------------------------------
+    def reserve_batch(self, N: int, L_i: int, S: int) -> int:
+        """Reserve a scheduled batch's blocks; returns the count to release."""
+        blocks = N * self.blocks_per_request(L_i, S)
+        self.reserved_blocks += blocks
+        return blocks
+
+    def release_blocks(self, blocks: int) -> None:
+        self.reserved_blocks = max(0, self.reserved_blocks - blocks)
 
 
 def model_kv_delta(n_layers: int, n_kv_heads: int, head_dim: int,

@@ -56,6 +56,12 @@ class StrategyConfig:
     # ILS conservative memory management
     max_parallel: int = 12
     max_cached_tokens: Optional[int] = None
+    # KV-cache layout on the workers (repro.kvcache): "dense" reserves a
+    # contiguous worst-case region per engine slot; "paged" allocates
+    # fixed-size token blocks against the (L_i + S) slice envelope, so
+    # parallelism is bounded by real free memory instead of a slot count.
+    # Continuous-mode runtimes require a PagedMemoryEstimator when "paged".
+    kv_layout: str = "dense"
     # SCLS-PRED / ORACLE (mode "pred"): generation-length prediction
     predictor: Optional[str] = None   # "histogram" | "proxy" | "perfect"
     coverage: float = 0.7             # calibration target quantile
@@ -71,15 +77,21 @@ def make_strategy(name: str, slice_len: int = 128, max_gen: int = 1024,
                   fixed_batch_size: int = 12, gamma: float = 3.0,
                   lam: float = 0.5, max_parallel: int = 12,
                   predictor: str = "histogram", coverage: float = 0.7,
-                  bucket_phi: float = 2.0) -> StrategyConfig:
+                  bucket_phi: float = 2.0,
+                  kv_layout: str = "dense") -> StrategyConfig:
     name = name.lower()
-    base = dict(slice_len=slice_len, max_gen=max_gen, gamma=gamma, lam=lam)
+    if kv_layout not in ("dense", "paged"):
+        raise ValueError(f"unknown kv_layout {kv_layout!r}")
+    base = dict(slice_len=slice_len, max_gen=max_gen, gamma=gamma, lam=lam,
+                kv_layout=kv_layout)
     if name == "sls":
         return StrategyConfig("SLS", "perreq", slice_len=max_gen, max_gen=max_gen,
-                              fixed_batch_size=fixed_batch_size, gamma=gamma, lam=lam)
+                              fixed_batch_size=fixed_batch_size, gamma=gamma,
+                              lam=lam, kv_layout=kv_layout)
     if name == "ils":
         return StrategyConfig("ILS", "continuous", slice_len=max_gen, max_gen=max_gen,
-                              max_parallel=max_parallel, gamma=gamma, lam=lam)
+                              max_parallel=max_parallel, gamma=gamma, lam=lam,
+                              kv_layout=kv_layout)
     if name == "so":
         return StrategyConfig("SO", "perreq", fixed_batch_size=fixed_batch_size, **base)
     if name == "pm":

@@ -7,10 +7,22 @@ Slot-based, DeepSpeed-FastGen-like semantics:
     join (FCFS), each join paying its own prefill;
   * no padding or invalid tokens are ever generated.
 
-Each slot owns a region of a shared KV cache; rows advance independently
-via per-row write slots (models.transformer.decode_step_rowslots).
-Dense-family models only (the baseline is evaluated on llama-family, as in
-the paper where FastGen serves LLaMA2).
+KV layouts (``kv_layout``):
+  * ``"dense"`` — each slot owns a contiguous W-slot region of a shared
+    cache, reserved worst-case at engine construction; parallelism is
+    capped by ``max_slots`` regardless of how short requests actually are.
+  * ``"paged"`` — K/V live in a shared page pool (``repro.kvcache``); a
+    request joining reserves exactly its slice envelope
+    ``bucketed(L_i) + min(forced, max_gen)`` tokens of pages (paper Eq. 5)
+    and frees them on exit, so under the same byte budget short requests
+    pack many more parallel rows.  Token outputs are exact vs. dense: the
+    logical slot/position arithmetic is identical, only the physical
+    placement differs (per-row block tables, ``models.transformer.
+    decode_step_paged`` → ``kernels.paged_decode_attention``).
+
+Rows advance independently via per-row write slots.  Dense-family models
+only (the baseline is evaluated on llama-family, as in the paper where
+FastGen serves LLaMA2).
 """
 from __future__ import annotations
 
@@ -23,6 +35,8 @@ import numpy as np
 
 from repro.core.request import bucket_len
 from repro.engine.sampling import greedy
+from repro.kvcache import (PageAllocator, clear_row, init_paged_kv_cache,
+                           write_prefill_pages)
 from repro.models import transformer
 from repro.models.attention import KVCache, init_kv_cache
 from repro.models.registry import Model
@@ -43,8 +57,11 @@ class _Slot:
 class ContinuousEngine:
     def __init__(self, model: Model, params, max_slots: int = 8,
                  max_context: int = 2048, eos_id: int = 1, pad_id: int = 0,
-                 len_bucket: int = 16):
+                 len_bucket: int = 16, kv_layout: str = "dense",
+                 page_tokens: int = 16,
+                 total_kv_tokens: Optional[int] = None):
         assert model.cfg.family in ("dense",), "ILS engine: dense family only"
+        assert kv_layout in ("dense", "paged"), kv_layout
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -53,24 +70,52 @@ class ContinuousEngine:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.len_bucket = len_bucket
+        self.kv_layout = kv_layout
         cfg = model.cfg
-        self.cache = init_kv_cache(cfg.n_layers, max_slots, self.W,
-                                   cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
-        self._decode = jax.jit(
-            lambda p, c, t, qp, sl: transformer.decode_step_rowslots(
-                p, cfg, c, t, qp, sl))
+        if kv_layout == "paged":
+            if self.W % page_tokens:
+                raise ValueError(f"max_context {self.W} must be a multiple "
+                                 f"of page_tokens {page_tokens}")
+            self.page_tokens = page_tokens
+            # byte-budget parity with dense by default: same slot count
+            # worth of cache, but allocated block by block on demand
+            total = (total_kv_tokens if total_kv_tokens is not None
+                     else max_slots * self.W)
+            if total % page_tokens:
+                raise ValueError(f"total_kv_tokens {total} must be a "
+                                 f"multiple of page_tokens {page_tokens}")
+            self.alloc: Optional[PageAllocator] = PageAllocator(
+                total // page_tokens, page_tokens)
+            self.cache = init_paged_kv_cache(
+                cfg.n_layers, max_slots, self.alloc.n_pages, page_tokens,
+                self.W // page_tokens, cfg.n_kv_heads, cfg.head_dim,
+                cfg.dtype)
+            self._decode = jax.jit(
+                lambda p, c, t, qp, sl: transformer.decode_step_paged(
+                    p, cfg, c, t, qp, sl))
+        else:
+            self.alloc = None
+            self.cache = init_kv_cache(cfg.n_layers, max_slots, self.W,
+                                       cfg.n_kv_heads, cfg.head_dim, cfg.dtype)
+            self._decode = jax.jit(
+                lambda p, c, t, qp, sl: transformer.decode_step_rowslots(
+                    p, cfg, c, t, qp, sl))
         self._prefill = jax.jit(
             lambda p, t, l: transformer.prefill(p, cfg, t, l, self.W),
             static_argnums=())
 
     # ------------------------------------------------------------------
-    def _insert(self, row: int, prompt: np.ndarray):
-        """Returns (first_token, padded_prefill_width)."""
+    def _run_prefill(self, prompt: np.ndarray):
         L = bucket_len(len(prompt), self.len_bucket)
         toks = np.full((1, L), self.pad_id, np.int32)
         toks[0, L - len(prompt):] = prompt
         last_logits, single = self._prefill(self.params, jnp.asarray(toks),
                                             jnp.asarray([len(prompt)], np.int32))
+        return int(np.asarray(greedy(last_logits))[0]), L, single
+
+    def _insert(self, row: int, prompt: np.ndarray):
+        """Dense join: returns (first_token, padded_prefill_width)."""
+        first, L, single = self._run_prefill(prompt)
         c = self.cache
         self.cache = KVCache(
             k=c.k.at[:, row].set(single.k[:, 0]),
@@ -79,7 +124,21 @@ class ContinuousEngine:
             write_idx=c.write_idx,
             lengths=c.lengths.at[row].set(len(prompt)),
         )
-        return int(np.asarray(greedy(last_logits))[0]), L
+        return first, L
+
+    def _insert_paged(self, row: int, prompt: np.ndarray, pages: List[int]):
+        """Paged join: scatter the prefill K/V into the reserved pages."""
+        first, L, single = self._run_prefill(prompt)
+        T = len(pages) * self.page_tokens  # covers prefill + decode envelope
+        self.cache = write_prefill_pages(
+            self.cache, row, pages, single.k[:, 0, :T], single.v[:, 0, :T],
+            np.asarray(single.slot_pos[0, :T]), len(prompt))
+        return first, L
+
+    def _tokens_needed(self, prompt_len: int, forced_cap: int) -> int:
+        """The slice envelope (L_i + S) this join must reserve — Eq. 5."""
+        base = bucket_len(prompt_len, self.len_bucket)
+        return min(base + forced_cap, self.W)
 
     # ------------------------------------------------------------------
     def serve(self, prompts: Sequence[np.ndarray],
@@ -88,19 +147,46 @@ class ContinuousEngine:
         """Serve all prompts to completion with continuous batching."""
         n = len(prompts)
         forced = list(forced_gen_lens) if forced_gen_lens is not None else [1 << 30] * n
+        if self.kv_layout == "paged":
+            # validate every envelope BEFORE any reservation: raising
+            # mid-run would leak in-flight requests' pages and discard
+            # their outputs (a never-fitting request can't just wait —
+            # it would silently starve itself and everything FCFS behind)
+            for i, p in enumerate(prompts):
+                need = self._tokens_needed(len(p), min(forced[i], max_gen))
+                if self.alloc.blocks_for_tokens(need) > self.alloc.n_pages:
+                    raise ValueError(
+                        f"request {i}: envelope of {need} tokens exceeds "
+                        f"the page pool ({self.alloc.n_pages} x "
+                        f"{self.page_tokens})")
         waiting = list(range(n))
         slots = [_Slot() for _ in range(self.max_slots)]
         outputs: List[List[int]] = [[] for _ in range(n)]
         join_order: List[int] = []
+        concurrency: List[int] = []
         t0 = time.perf_counter()
         iters = 0
         while iters < max_iters:
             iters += 1
-            # --- joins (FCFS, capped by slot count = conservative memory mgmt)
+            # --- joins (FCFS): dense is capped by slot count alone
+            # (conservative memory mgmt); paged additionally requires the
+            # request's (L_i + S) envelope to fit in free pages — the cap
+            # becomes the *actual* free memory
             for s_i, s in enumerate(slots):
                 if s.req_idx < 0 and waiting:
-                    ridx = waiting.pop(0)
-                    first, base = self._insert(s_i, prompts[ridx])
+                    ridx = waiting[0]
+                    if self.kv_layout == "paged":
+                        need = self._tokens_needed(
+                            len(prompts[ridx]), min(forced[ridx], max_gen))
+                        if not self.alloc.can_reserve(need):
+                            break  # FCFS: head of line waits for pages
+                        pages = self.alloc.reserve(ridx, need)
+                        waiting.pop(0)
+                        first, base = self._insert_paged(s_i, prompts[ridx],
+                                                         pages)
+                    else:
+                        waiting.pop(0)
+                        first, base = self._insert(s_i, prompts[ridx])
                     s.req_idx = ridx
                     s.cached = len(prompts[ridx])
                     s.base = base
@@ -111,6 +197,7 @@ class ContinuousEngine:
             active = [s for s in slots if s.req_idx >= 0]
             if not active:
                 break
+            concurrency.append(len(active))
             # --- one decode iteration over all slots (inactive rows masked)
             cur = np.zeros((self.max_slots,), np.int32)
             q_pos = np.zeros((self.max_slots,), np.int32)
@@ -131,16 +218,29 @@ class ContinuousEngine:
                 s.gen += 1
                 finished = (s.cur == self.eos_id) or (s.gen >= s.forced)
                 if finished:
+                    if self.kv_layout == "paged":
+                        self.alloc.release(s.req_idx)
+                        self.cache = clear_row(self.cache, s_i)
                     s.req_idx = -1  # exit immediately; slot joins next iter
                 else:
                     s.cur = int(nxt[s_i])
         wall = time.perf_counter() - t0
-        return ContinuousResult(outputs, wall, iters, join_order)
+        return ContinuousResult(outputs, wall, iters, join_order, concurrency)
 
 
 class ContinuousResult:
-    def __init__(self, outputs, wall_time, iterations, join_order):
+    def __init__(self, outputs, wall_time, iterations, join_order,
+                 concurrency=None):
         self.outputs = outputs
         self.wall_time = wall_time
         self.iterations = iterations
         self.join_order = join_order
+        self.concurrency = concurrency or []
+
+    @property
+    def peak_parallel(self) -> int:
+        return max(self.concurrency, default=0)
+
+    @property
+    def mean_parallel(self) -> float:
+        return float(np.mean(self.concurrency)) if self.concurrency else 0.0

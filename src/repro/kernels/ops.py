@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_prefill import flash_prefill as _prefill_pallas
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention as _paged_decode_pallas)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 _DEFAULT_IMPL = "xla"
@@ -72,6 +74,24 @@ def decode_gqa_attention(q, k_cache, v_cache, slot_pos, q_pos,
                               window=window, block_w=bw, interpret=_interpret())
     return ref.decode_attention_ref(q, k_cache, v_cache, slot_pos, q_pos,
                                     window=window)
+
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def paged_decode_attention(q, k_pages, v_pages, block_table, slot_pos, q_pos,
+                           window: Optional[int] = None,
+                           impl: Optional[str] = None):
+    """Single-token GQA decode over a paged KV cache. q (B,Hq,D) -> (B,Hq,D).
+
+    The page size is the kernel's cache-block size (one grid step per
+    page), so no block_w knob: pick ``page_tokens`` TPU-friendly instead.
+    """
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        return _paged_decode_pallas(q, k_pages, v_pages, block_table,
+                                    slot_pos, q_pos, window=window,
+                                    interpret=_interpret())
+    return ref.paged_decode_attention_ref(q, k_pages, v_pages, block_table,
+                                          slot_pos, q_pos, window=window)
 
 
 @partial(jax.jit, static_argnames=("chunk", "impl"))

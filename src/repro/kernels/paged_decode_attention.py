@@ -1,0 +1,116 @@
+"""Batched GQA decode attention over a *paged* KV cache — Pallas TPU kernel.
+
+Same roofline as ``kernels.decode_attention`` (τ_decode in Eq. 4 is
+dominated by streaming the cache from HBM), but K/V live in a shared page
+pool instead of per-row contiguous regions: logical block j of row b is
+physical page ``block_table[b, j]``.  The block table is passed as a
+*scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``) so the page
+indirection happens in the BlockSpec index maps — each (pg, D) K/V tile is
+DMA'd straight from its physical page, touched exactly once, and folded
+into a running softmax.  No (B, W) contiguous gather is ever materialized.
+
+Grid: (B, Hkv, nb) with the page axis sequential; all G = Hq/Hkv query
+heads of one kv head ride along per tile to amortize the stream.  Masking
+comes from ``slot_pos`` over *logical* slots (absolute position per slot,
+-1 = empty) — the same convention as the dense and ring caches, so the
+null-page padding of short rows (block id 0) is masked rather than
+special-cased and full/ring/paged layouts look identical to the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(bt_ref, q_pos_ref, slot_pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, window: Optional[int],
+            nb: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = q_pos_ref[0]           # () int32
+    slot_pos = slot_pos_ref[0, :]  # (pg,) — logical slots of page j
+    q = q_ref[0, 0].astype(jnp.float32)     # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (pg, D) — gathered via bt_ref
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (pg, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = (slot_pos >= 0) & (slot_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - slot_pos < window)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / l_scr[...][:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, block_table: jnp.ndarray,
+                           slot_pos: jnp.ndarray, q_pos: jnp.ndarray,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q (B,Hq,D); k/v_pages (P,pg,Hkv,D); block_table (B,nb) int32 physical
+    page per logical block (0 = null page, fully masked via slot_pos);
+    slot_pos (B,nb·pg); q_pos (B,).  Returns (B,Hq,D)."""
+    B, Hq, D = q.shape
+    pg, Hkv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_table.shape[1]
+    assert slot_pos.shape == (B, nb * pg), (slot_pos.shape, (B, nb * pg))
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    qg = q.reshape(B, Hkv, G, D)
+    kernel = functools.partial(_kernel, scale=scale, window=window, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # block_table feeds the K/V index maps
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j, bt: (b,)),        # q_pos
+            pl.BlockSpec((1, pg), lambda b, h, j, bt: (b, j)),   # slot_pos
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, pg, 1, D),
+                         lambda b, h, j, bt: (bt[b, j], 0, h, 0)),  # k page
+            pl.BlockSpec((1, pg, 1, D),
+                         lambda b, h, j, bt: (bt[b, j], 0, h, 0)),  # v page
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), q_pos.astype(jnp.int32),
+      slot_pos.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

@@ -36,6 +36,26 @@ def flash_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return o.reshape(B, T, Hq, D).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray, block_table: jnp.ndarray,
+                               slot_pos: jnp.ndarray, q_pos: jnp.ndarray,
+                               window: Optional[int] = None,
+                               scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token GQA decode over a *paged* KV cache.
+
+    q (B,Hq,D); k/v_pages (P,pg,Hkv,D); block_table (B,nb) physical page per
+    logical block; slot_pos (B,nb·pg) (-1 empty); q_pos (B,).
+    Materializes the per-row gather the Pallas kernel streams page by page.
+    """
+    B = q.shape[0]
+    pg, Hkv, D = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    nb = block_table.shape[1]
+    k_cache = k_pages[block_table].reshape(B, nb * pg, Hkv, D)
+    v_cache = v_pages[block_table].reshape(B, nb * pg, Hkv, v_pages.shape[-1])
+    return decode_attention_ref(q, k_cache, v_cache, slot_pos, q_pos,
+                                window=window, scale=scale)
+
+
 def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
                          v_cache: jnp.ndarray, slot_pos: jnp.ndarray,
                          q_pos: jnp.ndarray, window: Optional[int] = None,

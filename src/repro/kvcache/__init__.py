@@ -1,0 +1,33 @@
+"""Paged KV-cache subsystem: block-granular allocation for serving engines.
+
+The paper's slice-level analysis gives each scheduled request an *exact*
+memory envelope of ``(L_i + S)·Δ`` bytes (Eq. 5), yet a dense engine still
+reserves a contiguous worst-case ``(B, W)`` region per slot — throwing the
+tight bound away at the allocator and capping parallelism exactly the way
+the paper criticizes ILS for.  This package makes slice-granular
+reservations *real* allocations:
+
+  * ``PageAllocator`` — fixed-size token blocks, a free list, per-owner
+    block lists, ``reserve(owner, n_tokens)`` / ``release(owner)`` keyed to
+    the scheduler's ``(L_i + S)`` bound;
+  * ``PagedKVCache`` — the device-side page pool + per-row block tables
+    consumed by ``models.transformer.decode_step_paged`` and the Pallas
+    kernel ``kernels.paged_decode_attention``.
+
+``core.memory.PagedMemoryEstimator`` exposes the same pool to the DP
+batcher (Algorithm 1), counting free blocks instead of the ζ·M_ava closed
+form.
+"""
+from repro.core.memory import blocks_for
+from repro.kvcache.allocator import PageAllocator
+from repro.kvcache.paged import (PagedKVCache, init_paged_kv_cache,
+                                 clear_row, write_prefill_pages)
+
+__all__ = [
+    "PageAllocator",
+    "PagedKVCache",
+    "blocks_for",
+    "init_paged_kv_cache",
+    "clear_row",
+    "write_prefill_pages",
+]

@@ -1,0 +1,88 @@
+"""Page-table KV allocator: fixed-size token blocks with a free list.
+
+Host-side bookkeeping only — the device arrays live in
+``kvcache.paged.PagedKVCache``.  Page 0 is reserved as the *null page*:
+block-table rows of inactive slots and the padding entries of short rows
+all point at it, so masked writes land somewhere harmless and gathers
+through a padded table never index out of bounds.  The null page is never
+handed out and its slots are permanently masked (``slot_pos = -1``).
+
+``reserve(owner, n_tokens)`` is keyed to the scheduler's ``(L_i + S)``
+bound (paper Eq. 5): the engine reserves exactly the slice envelope at
+join/slice-start and releases it at eviction/slice-end, so the tight
+per-slice memory analysis survives all the way down to the allocator.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+# single source of the block-rounding rule, shared with the estimator
+from repro.core.memory import blocks_for
+
+
+class PageAllocator:
+    """Fixed-size token-block allocator with per-owner block lists.
+
+    ``n_pages`` counts usable pages (the null page is allocated on top of
+    it), so capacity comparisons against a dense layout stay apples to
+    apples: ``n_pages * page_tokens`` usable cache slots.
+    """
+
+    NULL_PAGE = 0
+
+    def __init__(self, n_pages: int, page_tokens: int):
+        if n_pages <= 0:
+            raise ValueError(f"need at least one usable page, got {n_pages}")
+        if page_tokens <= 0:
+            raise ValueError(f"page_tokens must be positive, got {page_tokens}")
+        self.page_tokens = page_tokens
+        self.n_pages = n_pages
+        # page ids 1..n_pages are usable; 0 is the null page
+        self._free: List[int] = list(range(n_pages, 0, -1))  # pop() -> low ids
+        self._owned: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.page_tokens)
+
+    def can_reserve(self, n_tokens: int) -> bool:
+        return self.blocks_for_tokens(n_tokens) <= self.free_blocks
+
+    # ------------------------------------------------------------------
+    def reserve(self, owner: int, n_tokens: int) -> List[int]:
+        """Reserve pages for ``n_tokens`` cache slots; returns the page ids.
+
+        All-or-nothing: raises ``MemoryError`` when the free list is short
+        (callers gate with ``can_reserve`` — a waiting request simply stays
+        queued, which is the whole point: parallelism is bounded by *real*
+        free memory, not a conservative slot count).
+        """
+        if owner in self._owned:
+            raise KeyError(f"owner {owner} already holds pages")
+        need = self.blocks_for_tokens(n_tokens)
+        if need > self.free_blocks:
+            raise MemoryError(
+                f"owner {owner}: need {need} blocks, {self.free_blocks} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned[owner] = pages
+        return list(pages)
+
+    def release(self, owner: int) -> int:
+        """Return ``owner``'s pages to the free list; returns the count."""
+        pages = self._owned.pop(owner)
+        self._free.extend(pages)
+        return len(pages)
+
+    def pages_of(self, owner: int) -> List[int]:
+        return list(self._owned[owner])
+
+    def owners(self) -> List[int]:
+        return list(self._owned)

@@ -24,7 +24,7 @@ import numpy as np
 from repro.cluster.realtime import RealCluster
 from repro.cluster.trace import WorkloadSpec, generate_trace
 from repro.configs import ARCHS, get_config
-from repro.core.memory import AnalyticMemoryEstimator
+from repro.core.memory import AnalyticMemoryEstimator, PagedMemoryEstimator
 from repro.core.schedulers import ALL_STRATEGIES, make_strategy
 from repro.engine.profiler import fit_estimator
 from repro.engine.static_engine import StaticEngine
@@ -48,6 +48,11 @@ def main():
                     help="length predictor for --strategy scls-pred")
     ap.add_argument("--coverage", type=float, default=0.7,
                     help="calibration target quantile for predicted caps")
+    ap.add_argument("--kv-layout", default="dense", choices=["dense", "paged"],
+                    help="worker KV layout (repro.kvcache): paged reserves "
+                         "slice envelopes block by block from a page pool")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="cache slots per KV block for --kv-layout paged")
     ap.add_argument("--slice-len", type=int, default=8)
     ap.add_argument("--max-gen", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
@@ -68,8 +73,15 @@ def main():
                                       input_lens=(16, 32, 64))
     print(f"[serve] estimator fitted: prefill rmse {prmse*1e3:.2f} ms, "
           f"decode rmse {drmse*1e3:.2f} ms")
-    mem = AnalyticMemoryEstimator(delta_bytes=model.kv_bytes_per_token(),
-                                  m_available=256e6, zeta=0.9, bucket=8)
+    if args.kv_layout == "paged":
+        mem = PagedMemoryEstimator(delta_bytes=model.kv_bytes_per_token(),
+                                   m_available=256e6, zeta=0.9,
+                                   page_tokens=args.page_tokens, bucket=8)
+        print(f"[serve] paged KV: {mem.total_blocks} blocks of "
+              f"{args.page_tokens} tokens per worker")
+    else:
+        mem = AnalyticMemoryEstimator(delta_bytes=model.kv_bytes_per_token(),
+                                      m_available=256e6, zeta=0.9, bucket=8)
     spec = WorkloadSpec("demo", input_mu=3.0, input_sigma=0.7, gen_mu=2.3,
                         gen_sigma=0.7, max_input=64, max_gen=args.max_gen)
     trace = generate_trace(args.rate, args.duration, spec, seed=args.seed,
@@ -78,7 +90,8 @@ def main():
                for _ in range(args.workers)]
     strategy = make_strategy(args.strategy, slice_len=args.slice_len,
                              max_gen=args.max_gen, gamma=0.25,
-                             predictor=args.predictor, coverage=args.coverage)
+                             predictor=args.predictor, coverage=args.coverage,
+                             kv_layout=args.kv_layout)
     cluster = RealCluster(strategy, engines, est, mem)
     metrics = cluster.run(trace, args.duration)
     print(json.dumps(dataclasses.asdict(metrics), indent=2))

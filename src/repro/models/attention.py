@@ -278,6 +278,42 @@ def attention_decode_rowslots(p: Params, x: jnp.ndarray, q_pos: jnp.ndarray,
     return out, k_cache, v_cache
 
 
+def attention_decode_paged(p: Params, x: jnp.ndarray, q_pos: jnp.ndarray,
+                           k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                           block_table: jnp.ndarray, slot_pos: jnp.ndarray,
+                           slots: jnp.ndarray, cfg: ModelConfig,
+                           window: Optional[int]
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Decode over a paged KV cache (``repro.kvcache``) with per-row slots.
+
+    x (B,1,d); k/v_pages (P,pg,Hkv,D) shared page pool; block_table (B,nb)
+    physical page per logical block; slot_pos (B,nb·pg) over *logical*
+    slots (must already include the current token position at ``slots``,
+    like the dense drivers); slots (B,) logical write slots.  The write
+    scatters one token into page ``block_table[b, slots[b]//pg]``; rows
+    whose blocks all point at the null page (inactive engine rows) write
+    there harmlessly.  Attention goes through
+    ``kernels.ops.paged_decode_attention`` — pure-jnp gather on CPU, the
+    Pallas page-streaming kernel on TPU — so the engine's paged path runs
+    the kernel end to end.
+    """
+    from repro.kernels import ops as kernel_ops  # deferred: keep models importable without kernels
+    B = x.shape[0]
+    pg = k_pages.shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, q_pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, q_pos[:, None], cfg.rope_theta)
+    pages = jnp.take_along_axis(block_table, (slots // pg)[:, None], axis=1)[:, 0]
+    offs = slots % pg
+    k_pages = k_pages.at[pages, offs].set(k[:, 0])
+    v_pages = v_pages.at[pages, offs].set(v[:, 0])
+    o = kernel_ops.paged_decode_attention(q[:, 0], k_pages, v_pages,
+                                          block_table, slot_pos, q_pos,
+                                          window=window)
+    out = dense_apply(p["wo"], o.reshape(B, 1, -1))
+    return out, k_pages, v_pages
+
+
 # ---------------------------------------------------------------------------
 # cache bookkeeping shared by all attention archs
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.models import attention as attn
 from repro.models.attention import KVCache
+from repro.kvcache.paged import PagedKVCache
 from repro.models.common import (ModelConfig, Params, embed_apply, init_embed,
                                  init_mlp, init_rms, mlp_apply, rms_norm,
                                  scan_layers, stack_layers, unembed_apply,
@@ -194,3 +195,37 @@ def decode_step_rowslots(params: Params, cfg: ModelConfig, cache: KVCache,
     h, (k_all, v_all) = scan_layers(body, h, params["layers"], cache.k, cache.v)
     logits = _logits(params, cfg, h)[:, 0]
     return logits, cache._replace(k=k_all, v=v_all, slot_pos=slot_pos)
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, cache: PagedKVCache,
+                      tokens: jnp.ndarray, q_pos: jnp.ndarray,
+                      slots: jnp.ndarray, window: Optional[int] = None
+                      ) -> Tuple[jnp.ndarray, PagedKVCache]:
+    """Continuous-batching decode over the paged cache (``repro.kvcache``).
+
+    Mirrors ``decode_step_rowslots`` — per-row positions and write slots —
+    but K/V live in a shared page pool reached through per-row block
+    tables, so a row only occupies the pages its ``(L_i + S)`` envelope
+    reserved.  ``slots`` index *logical* row slots; the page indirection
+    happens inside the attention layer.
+    """
+    window = window if window is not None else cfg.sliding_window
+    W = cache.window
+    oh = jax.nn.one_hot(slots, W, dtype=jnp.int32)
+    slot_pos = cache.slot_pos * (1 - oh) + q_pos[:, None].astype(jnp.int32) * oh
+    h = embed_apply(params["embed"], tokens[:, None], cfg)
+
+    def body(carry, layer, kp, vp):
+        x = rms_norm(carry, layer["ln_attn"], cfg.norm_eps)
+        a, kp, vp = attn.attention_decode_paged(
+            layer["attn"], x, q_pos, kp, vp, cache.block_table, slot_pos,
+            slots, cfg, window)
+        h2 = carry + a
+        m = mlp_apply(layer["mlp"], rms_norm(h2, layer["ln_mlp"], cfg.norm_eps), cfg.act)
+        return h2 + m, (kp, vp)
+
+    h, (k_all, v_all) = scan_layers(body, h, params["layers"],
+                                    cache.k_pages, cache.v_pages)
+    logits = _logits(params, cfg, h)[:, 0]
+    return logits, cache._replace(k_pages=k_all, v_pages=v_all,
+                                  slot_pos=slot_pos)

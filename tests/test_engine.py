@@ -113,6 +113,88 @@ def test_continuous_engine_respects_slot_cap(dense_setup):
     assert all(len(o) == 3 for o in res.outputs)
 
 
+def test_paged_engine_token_exact_vs_dense(dense_setup):
+    """kv_layout="paged" is pure layout: identical greedy tokens, join
+    order, and iteration count vs. the dense engine on the same seeds."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 9, 4, 12, 3], seed=3)
+    forced = [4, 6, 3, 5, 7]
+    de = ContinuousEngine(model, params, max_slots=2, max_context=64,
+                          eos_id=1, len_bucket=8)
+    pe = ContinuousEngine(model, params, max_slots=2, max_context=64,
+                          eos_id=1, len_bucket=8, kv_layout="paged",
+                          page_tokens=8)
+    rd = de.serve(prompts, forced_gen_lens=forced)
+    rp = pe.serve(prompts, forced_gen_lens=forced)
+    assert rp.outputs == rd.outputs
+    assert rp.join_order == rd.join_order
+    assert rp.iterations == rd.iterations
+
+
+def test_paged_engine_token_exact_with_eos(dense_setup):
+    """Exactness must also hold when EOS (not forced lengths) ends rows."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [6, 11, 4], seed=7)
+    de = ContinuousEngine(model, params, max_slots=2, max_context=64,
+                          eos_id=1, len_bucket=8)
+    pe = ContinuousEngine(model, params, max_slots=2, max_context=64,
+                          eos_id=1, len_bucket=8, kv_layout="paged",
+                          page_tokens=8)
+    rd = de.serve(prompts, max_gen=12)
+    rp = pe.serve(prompts, max_gen=12)
+    assert rp.outputs == rd.outputs
+
+
+def test_paged_engine_parallelism_bounded_by_free_pages(dense_setup):
+    """Under one shared KV-token budget the paged engine packs short
+    requests into strictly more parallel rows than dense worst-case slots
+    (the tentpole claim), while pages are reserved at join and all freed
+    by the time serving drains."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [4] * 6, seed=4)
+    forced = [3] * 6
+    W, budget = 64, 2 * 64
+    de = ContinuousEngine(model, params, max_slots=budget // W,
+                          max_context=W, eos_id=1, len_bucket=8)
+    pe = ContinuousEngine(model, params, max_slots=6, max_context=W,
+                          eos_id=1, len_bucket=8, kv_layout="paged",
+                          page_tokens=8, total_kv_tokens=budget)
+    rd = de.serve(prompts, forced_gen_lens=forced)
+    rp = pe.serve(prompts, forced_gen_lens=forced)
+    assert rp.outputs == rd.outputs
+    # each request's envelope = 8 (bucketed prompt) + 3 -> 2 pages of 8;
+    # 16 pages in the pool -> all 6 requests fit at once vs 2 dense slots
+    assert rd.peak_parallel == 2
+    assert rp.peak_parallel > rd.peak_parallel
+    assert rp.iterations < rd.iterations
+    assert pe.alloc.free_blocks == pe.alloc.n_pages  # everything released
+
+
+def test_paged_engine_rejects_bad_geometry(dense_setup):
+    cfg, model, params = dense_setup
+    with pytest.raises(ValueError):
+        ContinuousEngine(model, params, max_context=60, kv_layout="paged",
+                         page_tokens=16)  # 60 % 16 != 0
+
+
+def test_paged_engine_raises_on_never_fitting_request(dense_setup):
+    """A request whose envelope exceeds the whole page pool must raise —
+    waiting forever would silently drop it (and everything FCFS behind).
+    The raise happens BEFORE any reservation, so no pages leak and the
+    engine stays usable."""
+    cfg, model, params = dense_setup
+    eng = ContinuousEngine(model, params, max_slots=2, max_context=64,
+                           eos_id=1, len_bucket=8, kv_layout="paged",
+                           page_tokens=8, total_kv_tokens=32)
+    small = _prompts(cfg, [4], seed=5)[0]
+    huge = _prompts(cfg, [28], seed=5)[0]
+    with pytest.raises(ValueError, match="exceeds the page pool"):
+        eng.serve([small, huge], forced_gen_lens=[3, 20])
+    assert eng.alloc.free_blocks == eng.alloc.n_pages  # nothing leaked
+    res = eng.serve([small], forced_gen_lens=[3])  # engine still works
+    assert len(res.outputs[0]) == 3
+
+
 def test_engine_profiler_produces_fittable_samples(dense_setup):
     from repro.engine.profiler import fit_estimator
     cfg, model, params = dense_setup

@@ -12,7 +12,9 @@ given, settings, st = optional_hypothesis()
 from repro.kernels import ops
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_prefill import flash_prefill
-from repro.kernels.ref import decode_attention_ref, flash_prefill_ref
+from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.kernels.ref import (decode_attention_ref, flash_prefill_ref,
+                               paged_decode_attention_ref)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -112,6 +114,92 @@ def test_ring_cache_decode_kernel():
                            interpret=True)
     ref = decode_attention_ref(q, kc, vc, slot_pos, q_pos, window=6)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def _paged_setup(B, nb, pg, Hkv, D, P, dtype=jnp.float32, seed=0):
+    """Random page pool + block tables: each row fills a random number of
+    logical slots, mapped to shuffled non-null pages; unused table entries
+    stay at the null page (0) and are masked via slot_pos = -1."""
+    kp = jax.random.normal(KEY, (P, pg, Hkv, D), dtype)
+    vp = jax.random.normal(jax.random.fold_in(KEY, 1), (P, pg, Hkv, D), dtype)
+    rng = np.random.default_rng(seed)
+    bt = np.zeros((B, nb), np.int32)
+    slot_pos = np.full((B, nb * pg), -1, np.int32)
+    q_pos = []
+    for b in range(B):
+        fill = int(rng.integers(1, nb * pg + 1))
+        n_used = -(-fill // pg)
+        bt[b, :n_used] = rng.choice(np.arange(1, P), size=n_used, replace=False)
+        slot_pos[b, :fill] = np.arange(fill)
+        q_pos.append(fill - 1)
+    return kp, vp, jnp.asarray(bt), jnp.asarray(slot_pos), jnp.asarray(q_pos)
+
+
+@pytest.mark.parametrize("B,nb,pg,Hq,Hkv,D", [
+    (1, 2, 8, 1, 1, 8),
+    (2, 3, 8, 4, 2, 16),
+    (4, 2, 8, 4, 1, 32),   # MQA
+    (2, 4, 16, 4, 4, 64),  # MHA, long cache
+    (3, 3, 8, 6, 2, 16),   # non-pow2 batch
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 6])
+def test_paged_decode_attention_sweep(B, nb, pg, Hq, Hkv, D, dtype, window):
+    P = B * nb + 1  # enough distinct pages for every row + the null page
+    kp, vp, bt, slot_pos, q_pos = _paged_setup(B, nb, pg, Hkv, D, P, dtype)
+    q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hq, D), dtype)
+    out = paged_decode_attention(q, kp, vp, bt, slot_pos, q_pos,
+                                 window=window, interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, bt, slot_pos, q_pos,
+                                     window=window)
+    np.testing.assert_allclose(np.asarray(out.astype(jnp.float32)),
+                               np.asarray(ref.astype(jnp.float32)),
+                               atol=ATOL[dtype])
+
+
+def test_paged_equals_dense_on_gathered_cache():
+    """The paged kernel over scattered pages == the dense kernel over the
+    materialized gather: paging is pure layout, never math."""
+    B, nb, pg, Hq, Hkv, D = 2, 3, 8, 4, 2, 16
+    P = B * nb + 1
+    kp, vp, bt, slot_pos, q_pos = _paged_setup(B, nb, pg, Hkv, D, P)
+    q = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Hq, D))
+    paged = paged_decode_attention(q, kp, vp, bt, slot_pos, q_pos,
+                                   interpret=True)
+    kc = kp[bt].reshape(B, nb * pg, Hkv, D)
+    vc = vp[bt].reshape(B, nb * pg, Hkv, D)
+    dense = decode_attention(q, kc, vc, slot_pos, q_pos, block_w=pg,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense), atol=2e-5)
+
+
+def test_paged_decode_ring_positions():
+    """Wrapped (ring) positions must be handled purely via slot_pos, as in
+    the dense kernel — the block table stays oblivious."""
+    B, nb, pg, H, D = 1, 2, 4, 2, 16
+    P = 4
+    kp = jax.random.normal(KEY, (P, pg, H, D))
+    vp = jax.random.normal(jax.random.fold_in(KEY, 1), (P, pg, H, D))
+    q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, 4, D))
+    bt = jnp.asarray([[2, 1]], jnp.int32)
+    # cache holds positions 5..12 wrapped across the two pages
+    slot_pos = jnp.asarray(np.roll(np.arange(5, 13), 3)[None].astype(np.int32))
+    q_pos = jnp.array([12])
+    out = paged_decode_attention(q, kp, vp, bt, slot_pos, q_pos, window=6,
+                                 interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, bt, slot_pos, q_pos, window=6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_ops_dispatch_xla_equals_pallas():
+    B, nb, pg, Hkv, D = 2, 2, 8, 2, 16
+    P = B * nb + 1
+    kp, vp, bt, slot_pos, q_pos = _paged_setup(B, nb, pg, Hkv, D, P)
+    q = jax.random.normal(jax.random.fold_in(KEY, 4), (B, 4, D))
+    a = ops.paged_decode_attention(q, kp, vp, bt, slot_pos, q_pos, impl="xla")
+    b = ops.paged_decode_attention(q, kp, vp, bt, slot_pos, q_pos,
+                                   impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
 def test_ops_dispatch_xla_equals_pallas():

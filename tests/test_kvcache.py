@@ -1,0 +1,190 @@
+"""Paged KV-cache subsystem (repro.kvcache): allocator invariants, page
+bookkeeping, and the block-pool memory estimator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.core.memory import (MAX_BATCH_SIZE_CAP, AnalyticMemoryEstimator,
+                               PagedMemoryEstimator, RuleBasedMemoryEstimator)
+from repro.kvcache import (PageAllocator, blocks_for, clear_row,
+                           init_paged_kv_cache, write_prefill_pages)
+from repro.kvcache.paged import gather_row
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator
+# ---------------------------------------------------------------------------
+def test_allocator_reserve_release_roundtrip():
+    a = PageAllocator(n_pages=8, page_tokens=16)
+    assert a.free_blocks == 8
+    pages = a.reserve(owner=1, n_tokens=40)  # ceil(40/16) = 3 blocks
+    assert len(pages) == 3 and a.free_blocks == 5 and a.used_blocks == 3
+    assert all(p != PageAllocator.NULL_PAGE for p in pages)
+    assert a.pages_of(1) == pages
+    assert a.release(1) == 3
+    assert a.free_blocks == 8 and a.owners() == []
+
+
+def test_allocator_envelope_is_block_rounded():
+    a = PageAllocator(n_pages=4, page_tokens=16)
+    assert a.blocks_for_tokens(1) == 1
+    assert a.blocks_for_tokens(16) == 1
+    assert a.blocks_for_tokens(17) == 2
+    assert blocks_for(33, 16) == 3
+
+
+def test_allocator_all_or_nothing():
+    a = PageAllocator(n_pages=4, page_tokens=8)
+    a.reserve(owner=0, n_tokens=24)  # 3 blocks
+    assert not a.can_reserve(16)     # 2 blocks > 1 free
+    with pytest.raises(MemoryError):
+        a.reserve(owner=1, n_tokens=16)
+    assert a.free_blocks == 1        # failed reserve took nothing
+
+
+def test_allocator_rejects_double_reserve_and_unknown_release():
+    a = PageAllocator(n_pages=4, page_tokens=8)
+    a.reserve(owner=7, n_tokens=8)
+    with pytest.raises(KeyError):
+        a.reserve(owner=7, n_tokens=8)
+    with pytest.raises(KeyError):
+        a.release(99)
+
+
+def test_allocator_pages_are_exclusive():
+    a = PageAllocator(n_pages=6, page_tokens=8)
+    p1 = a.reserve(owner=1, n_tokens=20)
+    p2 = a.reserve(owner=2, n_tokens=20)
+    assert not set(p1) & set(p2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 100), min_size=1, max_size=20),
+       st.sampled_from([4, 8, 16]))
+def test_allocator_never_oversubscribes(token_requests, page_tokens):
+    """Property: pages handed out never exceed the pool, every page id is
+    unique and non-null, and releasing everything restores the free list."""
+    a = PageAllocator(n_pages=10, page_tokens=page_tokens)
+    live = {}
+    for owner, toks in enumerate(token_requests):
+        if a.can_reserve(toks):
+            live[owner] = a.reserve(owner, toks)
+    handed = [p for pages in live.values() for p in pages]
+    assert len(handed) == len(set(handed)) <= 10
+    assert PageAllocator.NULL_PAGE not in handed
+    assert a.used_blocks == len(handed)
+    for owner in list(live):
+        a.release(owner)
+    assert a.free_blocks == 10
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache bookkeeping
+# ---------------------------------------------------------------------------
+def test_write_prefill_pages_then_gather_roundtrip():
+    L, pg, Hkv, D = 2, 4, 2, 8
+    cache = init_paged_kv_cache(L, batch=2, n_pages=6, page_tokens=pg,
+                                max_blocks_per_row=3, n_kv=Hkv, head_dim=D,
+                                dtype=jnp.float32)
+    assert cache.window == 12 and cache.n_pages == 7  # +1 null page
+    k = jax.random.normal(jax.random.PRNGKey(0), (L, 6, Hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(1), (L, 6, Hkv, D))
+    sp = np.array([-1, 0, 1, 2, 3, 4], np.int32)  # left-padded positions
+    cache = write_prefill_pages(cache, row=0, page_ids=[3, 5], k=k, v=v,
+                                prefill_slot_pos=sp, length=5)
+    np.testing.assert_array_equal(np.asarray(cache.block_table[0]), [3, 5, 0])
+    np.testing.assert_array_equal(np.asarray(cache.slot_pos[0, :6]), sp)
+    assert (np.asarray(cache.slot_pos[0, 6:]) == -1).all()
+    gk, gv = gather_row(cache, 0)
+    # logical blocks 0,1 live in pages 3,5: prefill slots + zero pad
+    np.testing.assert_allclose(gk[:, :8], np.asarray(jnp.pad(
+        k, ((0, 0), (0, 2), (0, 0), (0, 0)))))
+    np.testing.assert_allclose(gv[:, :8], np.asarray(jnp.pad(
+        v, ((0, 0), (0, 2), (0, 0), (0, 0)))))
+    assert (gk[:, 8:] == 0).all()  # unused block -> null page
+    assert int(cache.lengths[0]) == 5
+
+
+def test_write_prefill_pages_overflow_raises():
+    cache = init_paged_kv_cache(1, batch=1, n_pages=4, page_tokens=4,
+                                max_blocks_per_row=2, n_kv=1, head_dim=4,
+                                dtype=jnp.float32)
+    k = jnp.zeros((1, 5, 1, 4))
+    with pytest.raises(ValueError):
+        write_prefill_pages(cache, 0, [1], k, k, np.arange(5), 5)
+
+
+def test_clear_row_unmaps_and_masks():
+    cache = init_paged_kv_cache(1, batch=2, n_pages=4, page_tokens=4,
+                                max_blocks_per_row=2, n_kv=1, head_dim=4,
+                                dtype=jnp.float32)
+    k = jnp.ones((1, 4, 1, 4))
+    cache = write_prefill_pages(cache, 1, [2], k, k, np.arange(4), 4)
+    cache = clear_row(cache, 1)
+    assert (np.asarray(cache.block_table[1]) == 0).all()
+    assert (np.asarray(cache.slot_pos[1]) == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# PagedMemoryEstimator (block pool view of Eq. 5/9)
+# ---------------------------------------------------------------------------
+def test_paged_estimator_counts_blocks():
+    # 64 tokens of budget in 16-token blocks = 4 blocks
+    mem = PagedMemoryEstimator(delta_bytes=1.0, m_available=64.0,
+                               page_tokens=16)
+    assert mem.total_blocks == 4
+    assert mem.blocks_per_request(20, 10) == 2  # ceil(30/16)
+    assert mem.fits(2, 20, 10) and not mem.fits(3, 20, 10)
+    assert mem.max_batch_size(20, 10) == 2
+
+
+def test_paged_estimator_tracks_inflight_reservations():
+    mem = PagedMemoryEstimator(delta_bytes=1.0, m_available=128.0,
+                               page_tokens=16)  # 8 blocks
+    assert mem.max_batch_size(16, 16) == 4      # 2 blocks each
+    held = mem.reserve_batch(2, 16, 16)         # 4 blocks in flight
+    assert mem.free_blocks == 4
+    assert mem.max_batch_size(16, 16) == 2      # counts FREE blocks
+    assert not mem.fits(3, 16, 16)
+    mem.release_blocks(held)
+    assert mem.max_batch_size(16, 16) == 4
+
+
+def test_paged_estimator_rounding_never_beats_analytic():
+    """Block rounding can only cost capacity vs. the idealized closed form."""
+    an = AnalyticMemoryEstimator(delta_bytes=100.0, m_available=1e6)
+    pg = PagedMemoryEstimator(delta_bytes=100.0, m_available=1e6,
+                              page_tokens=16)
+    for L, S in [(10, 28), (100, 128), (1000, 128)]:
+        assert pg.max_batch_size(L, S) <= an.max_batch_size(L, S)
+
+
+# ---------------------------------------------------------------------------
+# max_batch_size sentinel regression (satellite): the old code returned the
+# raw 1 << 20 doubling sentinel when the memory model never binds
+# ---------------------------------------------------------------------------
+def test_max_batch_size_cap_never_leaks_sentinel():
+    unbounded = [
+        AnalyticMemoryEstimator(delta_bytes=0.0, m_available=1e9),
+        PagedMemoryEstimator(delta_bytes=0.0, m_available=1e9),
+        RuleBasedMemoryEstimator(rules=((0, 1 << 30),)),  # always fits
+    ]
+    for mem in unbounded:
+        n = mem.max_batch_size(100, 128)
+        assert n == MAX_BATCH_SIZE_CAP, mem
+        assert n < 1 << 20  # the documented cap, not the search sentinel
+
+
+def test_max_batch_size_cap_does_not_change_bounded_answers():
+    mem = AnalyticMemoryEstimator(delta_bytes=1000.0, m_available=1e6)
+    for L in (10, 100, 500):
+        n = mem.max_batch_size(L, 28)
+        assert mem.fits(n, L, 28) and not mem.fits(n + 1, L, 28)
+    rule = RuleBasedMemoryEstimator()  # generic bisection path
+    assert rule.max_batch_size(1000, 128) == 12
+    assert rule.max_batch_size(100, 128) == 28

@@ -1,0 +1,96 @@
+"""Offloading (paper §4.5): Eq. 11 load bookkeeping, max-min vs
+round-robin balance, and placement-safety properties."""
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.core.offloader import MaxMinOffloader, RoundRobinOffloader
+from repro.core.request import Batch, Request
+
+
+def _batch(rid: int, est_time: float) -> Batch:
+    r = Request(rid=rid, arrival=0.0, input_len=8, gen_len=4)
+    return Batch(requests=[r], input_len=8, slice_len=4, est_time=est_time)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 11: load(w) += est on assign, -= est on completion (decay), so the
+# estimation error never accumulates across serving rounds
+# ---------------------------------------------------------------------------
+def test_eq11_load_accumulates_on_assign():
+    off = MaxMinOffloader(2)
+    out = off.assign([_batch(0, 3.0), _batch(1, 2.0), _batch(2, 1.0)])
+    assert sorted(off.loads.values()) == [3.0, 3.0]  # 3 vs 2+1 (max-min)
+    assert len(out) == 3
+
+
+def test_eq11_decay_on_batch_complete():
+    off = MaxMinOffloader(2)
+    off.assign([_batch(0, 3.0), _batch(1, 2.0)])
+    off.on_batch_complete(0, 3.0)
+    assert off.loads[0] == 0.0
+    off.on_batch_complete(1, 2.0)
+    assert all(v == 0.0 for v in off.loads.values())
+    assert off.min_load() == 0.0
+
+
+def test_eq11_decay_clamps_at_zero():
+    """Over-subtraction (completion reported with a larger estimate than
+    was ever added) must clamp, not drive the load negative — a negative
+    load would poison Eq. 12's min-load interval forever."""
+    off = RoundRobinOffloader(2)
+    off.assign([_batch(0, 1.0)])
+    off.on_batch_complete(0, 5.0)
+    assert off.loads[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# max-min vs round-robin imbalance (the Eq. 12 min-load signal / Fig. 17)
+# ---------------------------------------------------------------------------
+def _spread(loads):
+    vals = np.array(list(loads.values()))
+    return float(vals.max() - vals.min())
+
+
+def test_maxmin_balances_heterogeneous_batches_better_than_rr():
+    """The paper's motivating case: a few long batches among many short
+    ones.  Round-robin lands long batches on whichever worker is next;
+    max-min places longest-first onto the least-loaded worker."""
+    times = [8.0, 1.0, 1.0, 1.0, 7.0, 1.0, 1.0, 1.0]
+    mm, rr = MaxMinOffloader(4), RoundRobinOffloader(4)
+    mm.assign([_batch(i, t) for i, t in enumerate(times)])
+    rr.assign([_batch(i, t) for i, t in enumerate(times)])
+    assert _spread(mm.loads) < _spread(rr.loads)
+    # max-min is provably within max(est) of perfect balance here
+    assert _spread(mm.loads) <= max(times)
+    # and the min-load signal Eq. 12 feeds on is higher (no starved worker)
+    assert mm.min_load() >= rr.min_load()
+
+
+def test_maxmin_sorts_longest_first():
+    off = MaxMinOffloader(2)
+    out = off.assign([_batch(0, 1.0), _batch(1, 10.0), _batch(2, 5.0)])
+    # longest (10) placed first on an empty worker, 5 on the other, 1 after
+    est_order = [b.est_time for _, b in out]
+    assert est_order == [10.0, 5.0, 1.0]
+    assert sorted(off.loads.values()) == [6.0, 10.0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0.0, 100.0), min_size=0, max_size=30),
+       st.integers(1, 8), st.booleans())
+def test_assignments_never_exceed_worker_count(times, n_workers, use_maxmin):
+    """Property: every batch is assigned exactly once, to a worker id in
+    [0, n_workers), no matter the batch mix or worker count."""
+    off = (MaxMinOffloader if use_maxmin else RoundRobinOffloader)(n_workers)
+    batches = [_batch(i, t) for i, t in enumerate(times)]
+    out = off.assign(batches)
+    assert len(out) == len(batches)
+    assert {id(b) for _, b in out} == {id(b) for b in batches}
+    assert all(0 <= w < n_workers for w, _ in out)
+    assert set(off.loads) == set(range(n_workers))
+    # conservation: total load == total estimated time (Eq. 11 additions)
+    assert sum(off.loads.values()) == pytest.approx(sum(times))
