@@ -1,27 +1,26 @@
 """Shared setup for the paper-figure benchmarks.
 
-All cluster-scale figures run the real scheduler code through the
-calibrated discrete-event simulator (8 LLaMA2-13B-profile workers, as in
-the paper's testbed); engine-level figures run the real JAX engine on CPU
-with reduced models.  Default durations are trimmed for CI; ``--full``
-restores the paper's 600 s traces.
+All cluster-scale figures run the real scheduler code through the shared
+``repro.serving`` stack (SliceServer → SchedulerCore → SimBackend) on
+8 LLaMA2-13B-profile workers, as in the paper's testbed; engine-level
+figures run the real JAX engine on CPU with reduced models.  Default
+durations are trimmed for CI; ``--full`` restores the paper's 600 s
+traces.
 """
 from __future__ import annotations
 
 import copy
 import os
 import sys
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-import numpy as np
-
-from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.simulator import SimResult
 from repro.cluster.trace import CODEFUSE, generate_trace
-from repro.core.estimator import (ServingTimeEstimator, a100_llama13b_profile,
-                                  a100_llama13b_hf_profile)
+from repro.core.estimator import (a100_llama13b_hf_profile,
+                                  a100_llama13b_profile)
 from repro.core.memory import (A100_80GB_AVAILABLE, AnalyticMemoryEstimator,
                                LLAMA2_13B_DELTA, RuleBasedMemoryEstimator)
-from repro.core.schedulers import make_strategy
+from repro.serving import ServingConfig, fitted_estimator
 
 FULL = "--full" in sys.argv
 DURATION = 600.0 if FULL else 180.0
@@ -34,19 +33,6 @@ _ENGINE_SETTINGS = {"ds": dict(fixed_batch_size=12, gamma=3.0),
                     "hf": dict(fixed_batch_size=16, gamma=6.0)}
 
 
-def fitted_estimator(true_lat: ServingTimeEstimator, seed=0
-                     ) -> ServingTimeEstimator:
-    """'Profile' the ground-truth latency model with 2% measurement noise
-    and fit Eq. 3/4 — mirrors the paper's one-time profiling."""
-    rng = np.random.default_rng(seed)
-    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
-           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
-    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
-           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
-    est, _, _ = ServingTimeEstimator.fit(pre, dec)
-    return est
-
-
 def memory_estimator(engine: str):
     if engine == "ds":  # paper: rule table (Algorithm 2)
         return RuleBasedMemoryEstimator()
@@ -55,21 +41,29 @@ def memory_estimator(engine: str):
 
 
 def run_sim(strategy_name: str, rate: float, engine: str = "ds",
-            slice_len: int = 128, duration: float = None,
-            n_workers: int = N_WORKERS, seed: int = 1, trace=None):
+            slice_len: int = 128, duration: Optional[float] = None,
+            n_workers: int = N_WORKERS, seed: int = 1,
+            trace=None) -> SimResult:
     duration = duration or DURATION
     true_lat = _PROFILES[engine]()
     est = fitted_estimator(true_lat)
     mem = memory_estimator(engine)
     es = _ENGINE_SETTINGS[engine]
-    s = make_strategy(strategy_name, slice_len=slice_len,
-                      fixed_batch_size=es["fixed_batch_size"],
-                      gamma=es["gamma"], max_parallel=es["fixed_batch_size"])
+    cfg = ServingConfig(strategy=strategy_name, workers=n_workers,
+                        slice_len=slice_len,
+                        fixed_batch_size=es["fixed_batch_size"],
+                        gamma=es["gamma"],
+                        max_parallel=es["fixed_batch_size"],
+                        noise_sigma=0.02, seed=seed + 1)
     if trace is None:
         trace = generate_trace(rate, duration, CODEFUSE, seed=seed)
-    sim = ClusterSimulator(s, n_workers, true_lat, est, mem,
-                           noise_sigma=0.02, seed=seed + 1)
-    return sim.run(copy.deepcopy(trace), duration)
+    server = cfg.build_sim(true_lat, est, mem)
+    reqs = copy.deepcopy(trace)
+    server.replay(reqs)
+    metrics = server.drain(duration)
+    return SimResult(metrics, reqs,
+                     [w.completion_time for w in server.core.workers],
+                     server.core.batch_sizes)
 
 
 def emit(rows: List[Dict], name: str) -> None:

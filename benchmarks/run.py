@@ -37,6 +37,11 @@ def main() -> None:
             if rows and "throughput" in rows[0]:
                 best = max(float(r["throughput"]) for r in rows)
                 derived += f";best_thr={best}"
+            if rows and "p99_response_s" in rows[0]:
+                derived += (f";best_p99="
+                            f"{min(float(r['p99_response_s']) for r in rows)}"
+                            f";best_ttft="
+                            f"{min(float(r['ttft_mean_s']) for r in rows)}")
             print(f"{name},{dt:.0f},{derived}")
         except Exception as e:  # keep the suite going
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")

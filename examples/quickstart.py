@@ -16,14 +16,12 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.cluster.realtime import RealCluster
 from repro.cluster.trace import WorkloadSpec, generate_trace
 from repro.configs import get_config
-from repro.core.memory import AnalyticMemoryEstimator
-from repro.core.schedulers import make_strategy
 from repro.engine.profiler import fit_estimator
 from repro.engine.static_engine import StaticEngine
 from repro.models.registry import get_model
+from repro.serving import ServingConfig
 
 
 def main():
@@ -37,8 +35,10 @@ def main():
     print(f"estimator fit: prefill rmse {prmse*1e3:.2f}ms, "
           f"decode rmse {drmse*1e3:.2f}ms")
 
-    mem = AnalyticMemoryEstimator(delta_bytes=model.kv_bytes_per_token(),
-                                  m_available=64e6, zeta=0.9, bucket=8)
+    serve_cfg = ServingConfig(strategy="scls", backend="real", workers=2,
+                              slice_len=8, max_gen=24, gamma=0.25,
+                              m_available=64e6, mem_bucket=8)
+    mem = serve_cfg.memory_estimator(model.kv_bytes_per_token())
     spec = WorkloadSpec("demo", input_mu=3.0, input_sigma=0.6,
                         gen_mu=2.2, gen_sigma=0.6, max_input=48, max_gen=24)
     trace = generate_trace(rate=2.0, duration=10.0, spec=spec, seed=7,
@@ -47,11 +47,13 @@ def main():
 
     engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)
                for _ in range(2)]
-    scls = make_strategy("scls", slice_len=8, max_gen=24, gamma=0.25)
-    metrics = RealCluster(scls, engines, est, mem).run(trace, 10.0)
+    server = serve_cfg.build_real(engines, est, mem)
+    server.replay(trace)
+    metrics = server.drain(10.0)
 
     print(f"\nthroughput      : {metrics.throughput:.2f} req/s (virtual time)")
     print(f"mean response   : {metrics.mean_response:.2f} s")
+    print(f"TTFT mean       : {metrics.ttft_mean:.2f} s")
     print(f"avg batch size  : {metrics.avg_batch_size:.1f}")
     print(f"avg slices/req  : {metrics.avg_schedules:.2f}")
     print(f"worker CT std   : {metrics.ct_std:.2f} s")

@@ -1,5 +1,8 @@
 """Paper-scale cluster comparison: SLS vs ILS vs SCLS (+ ablations) on
-8 simulated A100/LLaMA2-13B workers — reproduces the shape of Fig. 12/15/17.
+8 simulated A100/LLaMA2-13B workers — reproduces the shape of Fig. 12/15/17,
+now driven through the online ``repro.serving`` API: every strategy runs a
+``SliceServer`` (submit → slice scheduling → drain) over the shared
+``SchedulerCore`` with the sim backend.
 
   PYTHONPATH=src python examples/serving_cluster.py [--rate 20] [--duration 300]
 """
@@ -7,15 +10,11 @@ import argparse
 import copy
 import sys
 
-import numpy as np
-
 sys.path.insert(0, "src")
 
-from repro.cluster.simulator import ClusterSimulator
-from repro.cluster.trace import CODEFUSE, generate_trace
-from repro.core.estimator import ServingTimeEstimator, a100_llama13b_profile
 from repro.core.memory import RuleBasedMemoryEstimator
-from repro.core.schedulers import ALL_STRATEGIES, make_strategy
+from repro.core.schedulers import ALL_STRATEGIES
+from repro.serving import ServingConfig, default_sim_environment
 
 
 def main():
@@ -26,29 +25,31 @@ def main():
     ap.add_argument("--slice-len", type=int, default=128)
     args = ap.parse_args()
 
-    true_lat = a100_llama13b_profile()
-    rng = np.random.default_rng(0)
-    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
-           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
-    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
-           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
-    est, _, _ = ServingTimeEstimator.fit(pre, dec)
-    mem = RuleBasedMemoryEstimator()  # paper Algorithm 2 (DS engine)
+    from repro.cluster.trace import CODEFUSE, generate_trace
+
+    # paper testbed wiring, centralized in repro.serving (DS profile:
+    # Algorithm 2 rule table for memory)
+    true_lat, est, _ = default_sim_environment("ds")
     trace = generate_trace(args.rate, args.duration, CODEFUSE, seed=1)
     print(f"{len(trace)} requests @ {args.rate}/s over {args.duration:.0f}s, "
           f"{args.workers} workers (DS profile)\n")
     hdr = f"{'strategy':8s} {'thr(req/s)':>10s} {'resp(s)':>9s} {'p95(s)':>8s} " \
-          f"{'CTstd(s)':>9s} {'batch':>6s} {'invalid':>8s} {'pads':>7s}"
+          f"{'p99(s)':>8s} {'ttft(s)':>8s} {'CTstd(s)':>9s} {'batch':>6s} " \
+          f"{'invalid':>8s} {'pads':>7s}"
     print(hdr)
     print("-" * len(hdr))
     for name in ALL_STRATEGIES:
-        s = make_strategy(name, slice_len=args.slice_len, fixed_batch_size=12,
-                          gamma=3.0, max_parallel=12)
-        sim = ClusterSimulator(s, args.workers, true_lat, est, mem,
-                               noise_sigma=0.02, seed=2)
-        m = sim.run(copy.deepcopy(trace), args.duration).metrics
+        cfg = ServingConfig(strategy=name, backend="sim",
+                            workers=args.workers, slice_len=args.slice_len,
+                            fixed_batch_size=12, gamma=3.0, max_parallel=12,
+                            noise_sigma=0.02, seed=2)
+        server = cfg.build_sim(true_lat, est, RuleBasedMemoryEstimator())
+        server.replay(copy.deepcopy(trace))
+        m = server.drain(args.duration)
+        assert m.n_completed > 0, f"{name}: no requests completed"
         print(f"{m.name:8s} {m.throughput:10.2f} {m.mean_response:9.1f} "
-              f"{m.p95_response:8.1f} {m.ct_std:9.1f} {m.avg_batch_size:6.1f} "
+              f"{m.p95_response:8.1f} {m.p99_response:8.1f} "
+              f"{m.ttft_mean:8.1f} {m.ct_std:9.1f} {m.avg_batch_size:6.1f} "
               f"{m.avg_invalid_tokens:8.1f} {m.avg_pad_tokens:7.1f}")
 
 

@@ -21,35 +21,27 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.cluster.simulator import ClusterSimulator
 from repro.cluster.trace import CODEFUSE, generate_trace
-from repro.core.estimator import ServingTimeEstimator, a100_llama13b_profile
 from repro.core.memory import RuleBasedMemoryEstimator
-from repro.core.schedulers import make_strategy
+from repro.serving import ServingConfig, default_sim_environment
 
 
 def main():
-    true_lat = a100_llama13b_profile()
-    rng = np.random.default_rng(0)
-    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
-           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
-    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
-           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
-    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    true_lat, est, _ = default_sim_environment("ds")
     trace = generate_trace(20.0, 300.0, CODEFUSE, seed=1)
     for strat in ("scls", "scls-pred"):
         print(f"--- {strat} ---")
         print(f"{'S':>5s} {'thr':>7s} {'resp(s)':>8s} {'slices':>7s} "
               f"{'batch':>6s} {'pads':>7s} {'early%':>7s} {'CTstd':>6s}")
         for S in (16, 32, 64, 128, 256, 512, 1024):
-            s = make_strategy(strat, slice_len=S, fixed_batch_size=12,
-                              gamma=3.0)
-            mem = RuleBasedMemoryEstimator()
-            sim = ClusterSimulator(s, 8, true_lat, est, mem,
-                                   noise_sigma=0.02, seed=2)
-            res = sim.run(copy.deepcopy(trace), 300.0)
-            m = res.metrics
-            sched = np.mean([r.n_schedules for r in res.requests if r.done])
+            cfg = ServingConfig(strategy=strat, workers=8, slice_len=S,
+                                fixed_batch_size=12, gamma=3.0,
+                                noise_sigma=0.02, seed=2)
+            server = cfg.build_sim(true_lat, est, RuleBasedMemoryEstimator())
+            reqs = copy.deepcopy(trace)
+            server.replay(reqs)
+            m = server.drain(300.0)
+            sched = np.mean([r.n_schedules for r in reqs if r.done])
             print(f"{S:5d} {m.throughput:7.2f} {m.mean_response:8.1f} "
                   f"{sched:7.2f} {m.avg_batch_size:6.1f} "
                   f"{m.avg_pad_tokens:7.1f} {100*m.early_return_ratio:7.2f} "

@@ -1,0 +1,110 @@
+"""Regenerate tests/data/golden_batch_compositions.json.
+
+The golden file pins the exact batch compositions (which requests are
+dispatched together, where, and with what slice) produced by the
+pre-`SchedulerCore` ``ClusterSimulator`` (commit 307a423) for a fixed
+trace/seed under sls / ils / scls / scls-cb.  ``tests/test_serving.py::
+test_scheduler_core_matches_legacy_batch_compositions`` replays the same
+scenarios through the refactored core and asserts byte-identical logs, so
+the sim backend can never silently drift from the legacy scheduler.
+
+  PYTHONPATH=src python scripts/gen_equivalence_golden.py
+
+Only rerun this when a change *intends* to alter scheduling decisions;
+the diff of the JSON then documents exactly what changed.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.cluster.simulator import ClusterSimulator  # noqa: E402
+from repro.cluster.trace import CODEFUSE, generate_trace  # noqa: E402
+from repro.core.estimator import (ServingTimeEstimator,  # noqa: E402
+                                  a100_llama13b_profile)
+from repro.core.memory import (A100_80GB_AVAILABLE,  # noqa: E402
+                               AnalyticMemoryEstimator, LLAMA2_13B_DELTA)
+from repro.core.schedulers import make_strategy  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
+                   "golden_batch_compositions.json")
+
+SCENARIOS = [
+    # (strategy, noise_sigma)
+    ("sls", 0.0), ("ils", 0.0), ("scls", 0.0), ("scls-cb", 0.0),
+    ("sls", 0.05), ("ils", 0.05), ("scls", 0.05), ("scls-cb", 0.05),
+]
+
+
+def build_env():
+    true_lat = a100_llama13b_profile()
+    rng = np.random.default_rng(0)
+    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    mem = AnalyticMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                  m_available=A100_80GB_AVAILABLE, zeta=0.9)
+    return true_lat, est, mem
+
+
+def run_one(name: str, noise_sigma: float):
+    true_lat, est, mem = build_env()
+    trace = generate_trace(3.0, 60.0, CODEFUSE, seed=7)
+    s = make_strategy(name, slice_len=64, fixed_batch_size=8, gamma=3.0,
+                      max_parallel=8)
+    sim = ClusterSimulator(s, 3, true_lat, est, mem,
+                           noise_sigma=noise_sigma, seed=2)
+    if not hasattr(sim, "batch_log"):  # pre-refactor legacy: instrument
+        sim.batch_log = []
+        orig_start, orig_cont = sim._start_batch, sim._continuous_step
+
+        def start_batch(w):
+            if not w.busy and w.queue:
+                b = w.queue[0]
+                sim.batch_log.append(
+                    ["static", w.wid, sorted(r.rid for r in b.requests),
+                     int(b.input_len), int(b.slice_len)])
+            orig_start(w)
+
+        def continuous_step(w):
+            orig_cont(w)
+            if w.busy and w.running:
+                sim.batch_log.append(
+                    ["cont", w.wid, sorted(e[0].rid for e in w.running)])
+
+        sim._start_batch = start_batch
+        sim._continuous_step = continuous_step
+    res = sim.run(copy.deepcopy(trace), 60.0)
+    return dict(strategy=name, noise_sigma=noise_sigma,
+                n_requests=len(trace),
+                n_completed=res.metrics.n_completed,
+                batch_log=sim.batch_log)
+
+
+def main():
+    out = {"scenario_args": dict(rate=3.0, duration=60.0, workload="codefuse",
+                                 trace_seed=7, workers=3, slice_len=64,
+                                 fixed_batch_size=8, gamma=3.0, max_parallel=8,
+                                 sim_seed=2),
+           "runs": [run_one(n, sig) for n, sig in SCENARIOS]}
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(out, f, separators=(",", ":"))
+        f.write("\n")
+    for r in out["runs"]:
+        print(f"{r['strategy']:8s} sigma={r['noise_sigma']:<5} "
+              f"{len(r['batch_log'])} dispatches, "
+              f"{r['n_completed']}/{r['n_requests']} completed")
+    print(f"wrote {os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,11 @@ class RunMetrics:
     n_completed: int
     throughput: float           # completed requests / s (paper Fig. 12 top)
     mean_response: float        # paper Fig. 12 middle
-    p95_response: float         # paper Fig. 12 bottom
+    p50_response: float         # end-to-end latency percentiles (beyond
+    p95_response: float         # paper Fig. 12 bottom: p95 only)
+    p99_response: float
+    ttft_mean: float            # time to first token (slice-granular:
+    ttft_p95: float             # tokens materialize at slice boundaries)
     ct_std: float               # STD of worker completion times (Fig. 17)
     avg_batch_size: float       # Fig. 13b
     avg_invalid_tokens: float   # Fig. 13a
@@ -35,7 +39,15 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
                     batch_sizes: Sequence[int],
                     early_returns: int, total_batches: int) -> RunMetrics:
     done = [r for r in requests if r.done and r.finish_time is not None]
+    # requests can be empty (an online server drained before any submit)
+    per_req = (np.array([[r.invalid_tokens, r.pad_tokens, r.n_schedules]
+                         for r in requests], float)
+               if requests else np.zeros((1, 3)))
     resp = np.array([r.response_time() for r in done]) if done else np.array([0.0])
+    ttft = np.array([r.first_token_time - r.arrival for r in done
+                     if r.first_token_time is not None])
+    if ttft.size == 0:
+        ttft = np.array([0.0])
     ct = np.array(list(worker_completion_times)) if worker_completion_times else np.array([0.0])
     bs = np.array(list(batch_sizes)) if batch_sizes else np.array([0.0])
     return RunMetrics(
@@ -45,12 +57,16 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
         n_completed=len(done),
         throughput=len(done) / max(ct.max(), duration, 1e-9),
         mean_response=float(resp.mean()),
+        p50_response=float(np.percentile(resp, 50)),
         p95_response=float(np.percentile(resp, 95)),
+        p99_response=float(np.percentile(resp, 99)),
+        ttft_mean=float(ttft.mean()),
+        ttft_p95=float(np.percentile(ttft, 95)),
         ct_std=float(ct.std()),
         avg_batch_size=float(bs.mean()),
-        avg_invalid_tokens=float(np.mean([r.invalid_tokens for r in requests])),
-        avg_pad_tokens=float(np.mean([r.pad_tokens for r in requests])),
-        avg_schedules=float(np.mean([r.n_schedules for r in requests])),
+        avg_invalid_tokens=float(per_req[:, 0].mean()),
+        avg_pad_tokens=float(per_req[:, 1].mean()),
+        avg_schedules=float(per_req[:, 2].mean()),
         early_return_ratio=early_returns / max(total_batches, 1),
         makespan=float(ct.max()),
     )

@@ -1,157 +1,73 @@
-"""Real-execution cluster: the same scheduler code as the simulator, but
-workers run batches on real JAX engines (StaticEngine), every FLOP real.
+"""Real-execution cluster (legacy shim): the same scheduler code as the
+simulator, but workers run batches on real JAX engines (StaticEngine),
+every FLOP real.
 
-One physical CPU hosts all workers, so each worker keeps a *virtual clock*
-advanced by the measured wall time of its own batches — worker i's timeline
-is exactly what i parallel machines would see (scheduling decisions use
-virtual time only).  Token outcomes (EOS, invalid, pads) come from the
-engine, not from the latency model.
+The scheduling loop that used to live here moved into
+``repro.serving.core.SchedulerCore``; this module keeps the historical
+constructor working as a thin wrapper over ``SchedulerCore`` +
+``repro.serving.backends.RealBackend``.  One physical CPU hosts all
+workers, so each worker keeps a *virtual clock* advanced by the measured
+wall time of its own batches — worker i's timeline is exactly what i
+parallel machines would see.  Token outcomes (EOS, invalid, pads) come
+from the engine, not from a latency model.
+
+Prefer ``repro.serving.ServingConfig(...).build_real(engines, est, mem)``
+for new code; it returns the online SliceServer API over the same core.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.cluster.metrics import RunMetrics, compute_metrics
-from repro.core.batcher import dp_batch
+from repro.cluster.metrics import RunMetrics
 from repro.core.estimator import ServingTimeEstimator
-from repro.core.interval import next_interval
-from repro.core.memory import MemoryEstimator, PagedMemoryEstimator
-from repro.core.offloader import MaxMinOffloader, RoundRobinOffloader
-from repro.core.request import Batch, Request
+from repro.core.memory import MemoryEstimator
+from repro.core.request import Request
 from repro.core.schedulers import StrategyConfig
 from repro.engine.static_engine import StaticEngine
-from repro.kvcache import PageAllocator
-from repro.predict import LengthPredictor, PredictionPipeline
+from repro.predict import LengthPredictor
+from repro.serving.backends import RealBackend
+from repro.serving.core import SchedulerCore
 
 
 class RealCluster:
-    """Central-mode strategies (PM/AB/LB/SCLS and the prediction-aware
-    SCLS-PRED/ORACLE) against real engines."""
+    """Deprecated shim: central-mode strategies (PM/AB/LB/SCLS and the
+    prediction-aware SCLS-PRED/ORACLE) against real engines."""
 
     def __init__(self, strategy: StrategyConfig, engines: Sequence[StaticEngine],
                  sched_est: ServingTimeEstimator, mem: MemoryEstimator,
                  predictor: Optional[LengthPredictor] = None):
         assert strategy.mode in ("central", "pred")
-        self.s = strategy
-        # pred mode: the shared pipeline (same code as the simulator)
-        self.pred = (PredictionPipeline(strategy, predictor)
-                     if strategy.mode == "pred" else None)
-        self.predictor = self.pred.predictor if self.pred else None
-        self.calibrator = self.pred.calibrator if self.pred else None
+        backend = RealBackend(engines, mem=mem, kv_layout=strategy.kv_layout,
+                              sched_bucket=sched_est.bucket)
         self.engines = list(engines)
-        self.n_workers = len(engines)
-        self.est = sched_est
-        self.mem = mem
-        self.offloader = (MaxMinOffloader(self.n_workers)
-                          if strategy.offload == "maxmin"
-                          else RoundRobinOffloader(self.n_workers))
-        # kv_layout="paged": each worker machine gets a real page allocator;
-        # a scheduled slice reserves every member's (L_i + S) envelope at
-        # slice start and frees it at slice end, so the DP batcher's no-OOM
-        # constraint (block-counting fits()) is enforced by an actual free
-        # list rather than assumed
-        self.allocators: Optional[List[PageAllocator]] = None
-        if strategy.kv_layout == "paged":
-            if not isinstance(mem, PagedMemoryEstimator):
-                raise TypeError("kv_layout='paged' needs a PagedMemoryEstimator")
-            if mem.bucket % sched_est.bucket:
-                # fits() admits with mem.bucket over raw lengths, while the
-                # slice-start reserve charges the batch input length (est-
-                # bucketed); mem.bucket must be a multiple of est.bucket so
-                # admission is at least as conservative as the reserve —
-                # otherwise a legitimately admitted batch can MemoryError
-                raise ValueError(
-                    f"PagedMemoryEstimator.bucket ({mem.bucket}) must be a "
-                    f"multiple of the estimator bucket ({sched_est.bucket})")
-            self.allocators = [PageAllocator(mem.total_blocks, mem.page_tokens)
-                               for _ in self.engines]
-        self.pool: List[Request] = []
-        self.worker_time = [0.0] * self.n_workers
-        self.worker_queue: List[List[Batch]] = [[] for _ in range(self.n_workers)]
-        self.batch_sizes: List[int] = []
-        self.early_returns = 0
-        self.total_batches = 0
-        self.generated_tokens: Dict[int, List[int]] = {}
+        self.core = SchedulerCore(strategy, backend, len(engines), sched_est,
+                                  mem, predictor=predictor)
 
-    # ------------------------------------------------------------------
-    def _serve_on_worker(self, w: int, b: Batch, start_time: float) -> float:
-        """Run batch b on engine w; returns completion (virtual) time."""
-        eng = self.engines[w]
-        prompts = [r.prompt for r in b.requests]
-        prev = [self.generated_tokens.get(r.rid, []) for r in b.requests]
-        forced = [r.remaining_gen for r in b.requests]
-        alloc = self.allocators[w] if self.allocators is not None else None
-        if alloc is not None:
-            # slice start: every member holds the batch envelope L_i + S
-            # (rows are padded to the batch input length, as the engine's
-            # per-batch cache is) — MemoryError here means the DP batcher
-            # violated its own no-OOM constraint
-            for r in b.requests:
-                alloc.reserve(r.rid, b.input_len + b.slice_len)
-        res = eng.serve_batch(prompts, b.slice_len, forced_gen_lens=forced,
-                              already_generated=prev)
-        if alloc is not None:
-            for r in b.requests:  # slice end: envelope freed for the next tick
-                alloc.release(r.rid)
-        t_done = start_time + res.wall_time
-        self.total_batches += 1
-        self.batch_sizes.append(b.size)
-        if res.early_return:
-            self.early_returns += 1
-        for r, rr in zip(b.requests, res.results):
-            r.n_schedules += 1
-            r.pad_tokens += rr["pad"]
-            r.invalid_tokens += rr["invalid"]
-            r.generated += rr["n_valid"]
-            self.generated_tokens.setdefault(r.rid, []).extend(rr["tokens"])
-            if r.first_token_time is None:
-                r.first_token_time = t_done
-            if r.remaining_gen <= 0:
-                r.done = True
-                r.finish_time = t_done
-                r.output_tokens = self.generated_tokens.pop(r.rid)
-                # online-learning feedback on every completed request
-                if self.pred is not None:
-                    self.pred.on_complete(r)
-            else:
-                self.pool.append(r)
-        self.offloader.on_batch_complete(w, b.est_time)
-        return t_done
+    # --- legacy attribute surface ---
+    @property
+    def s(self) -> StrategyConfig:
+        return self.core.s
+
+    @property
+    def pred(self):
+        return self.core.pred
+
+    @property
+    def predictor(self):
+        return self.core.predictor
+
+    @property
+    def calibrator(self):
+        return self.core.calibrator
+
+    @property
+    def allocators(self):
+        return self.core.backend.allocators
+
+    @property
+    def batch_sizes(self) -> List[int]:
+        return self.core.batch_sizes
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], duration: float) -> RunMetrics:
-        arrivals = sorted(requests, key=lambda r: r.arrival)
-        now = 0.0
-        idx = 0
-        while True:
-            # admit arrivals up to the current virtual time
-            while idx < len(arrivals) and arrivals[idx].arrival <= now:
-                self.pool.append(arrivals[idx])
-                idx += 1
-            if not self.pool and idx < len(arrivals):
-                now = max(now, arrivals[idx].arrival)
-                continue
-            if not self.pool and idx >= len(arrivals):
-                break
-            # one scheduling round
-            reqs, self.pool = self.pool, []
-            if self.s.mode == "pred":
-                batches = self.pred.batches(reqs, self.est, self.mem)
-            else:
-                batches = dp_batch(reqs, self.s.slice_len, self.est, self.mem,
-                                   max_batch_size=self.s.dp_cap)
-            for w, b in self.offloader.assign(batches):
-                start = max(self.worker_time[w], now)
-                self.worker_time[w] = self._serve_on_worker(w, b, start)
-            if self.s.adaptive_interval:
-                dt = next_interval(self.offloader.min_load(), self.s.lam, self.s.gamma)
-            else:
-                dt = self.s.gamma
-            now += dt
-        return compute_metrics(self.s.name, list(requests), duration,
-                               self.worker_time, self.batch_sizes,
-                               self.early_returns, self.total_batches)
+        return self.core.run(requests, duration)

@@ -1,45 +1,30 @@
-"""Discrete-event multi-worker serving simulator.
+"""Discrete-event multi-worker serving simulator (legacy shim).
 
-Runs the *actual* scheduler code (DP batcher, max-min offloader, adaptive
-interval) against workers whose serving time comes from a calibrated
-ground-truth latency model (paper-scale experiments) — the same scheduler
-code that ``repro.launch.serve`` drives against real JAX engines.
+The scheduling loop that used to live here moved verbatim into
+``repro.serving.core.SchedulerCore``; this module keeps the historical
+constructor working as a thin wrapper over ``SchedulerCore`` +
+``repro.serving.backends.SimBackend`` (ground-truth latency model,
+optionally noisy, in virtual time).  Scheduling decisions are therefore
+*bit-identical* to the real cluster's — there is one code path with two
+backends, pinned by ``tests/test_serving.py``'s golden equivalence test.
 
-Worker modes mirror the strategy modes (core.schedulers):
-  * perreq     — SLS/SO: requests round-robined on arrival; each worker runs
-                 FCFS static batches of fixed size from its local queue.
-  * central    — PM/AB/LB/SCLS: a central tick fetches the pool, batches,
-                 and offloads whole batches to worker queues.
-  * pred       — SCLS-PRED/ORACLE: central tick, but requests are bucketed
-                 by calibrated *predicted* remaining length with per-batch
-                 slice lengths (core.batcher.bucketed_pred_batch); every
-                 completed request is fed back to the online predictor.
-  * continuous — ILS: per-iteration join/exit with a conservative
-                 parallelism cap (DeepSpeed-FastGen-like).
-
-Ground truth vs. estimator: the scheduler consults ``sched_est`` (fit from
-profiles); workers consume time from ``true_lat`` (optionally noisy), so
-estimation error and its consequences are modeled faithfully.
+Prefer ``repro.serving.ServingConfig(...).build_sim()`` for new code;
+it returns the online :class:`~repro.serving.server.SliceServer` API
+(submit / stream / cancel) over the same core.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
-from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.batcher import dp_batch, fcfs_batch
+from repro.cluster.metrics import RunMetrics
 from repro.core.estimator import ServingTimeEstimator
-from repro.core.interval import next_interval
-from repro.core.memory import MemoryEstimator, PagedMemoryEstimator
-from repro.core.offloader import MaxMinOffloader, Offloader, RoundRobinOffloader
-from repro.core.request import Batch, Request, bucket_len
+from repro.core.memory import MemoryEstimator
+from repro.core.request import Request
 from repro.core.schedulers import StrategyConfig
-from repro.cluster.metrics import RunMetrics, compute_metrics
-from repro.predict import LengthPredictor, PredictionPipeline
+from repro.predict import LengthPredictor
+from repro.serving.backends import SimBackend
+from repro.serving.core import SchedulerCore
 
 
 @dataclasses.dataclass
@@ -50,316 +35,64 @@ class SimResult:
     batch_sizes: List[int]
 
 
-class _Worker:
-    __slots__ = ("wid", "queue", "busy", "completion_time",
-                 "running", "pending", "next_wake")
-
-    def __init__(self, wid: int):
-        self.wid = wid
-        self.queue: deque = deque()       # batches (static modes)
-        self.pending: deque = deque()     # requests (perreq/continuous)
-        self.running: list = []  # [req, cached_len, lease_left, blocks] continuous mode
-        self.busy = False
-        self.completion_time = 0.0
-        self.next_wake = None
-
-
 class ClusterSimulator:
+    """Deprecated shim: offline ``run()`` over the shared SchedulerCore."""
+
     def __init__(self, strategy: StrategyConfig, n_workers: int,
                  true_lat: ServingTimeEstimator, sched_est: ServingTimeEstimator,
                  mem: MemoryEstimator, noise_sigma: float = 0.0, seed: int = 0,
                  ils_span: int = 32, predictor: Optional[LengthPredictor] = None):
-        self.s = strategy
-        # pred mode: the shared pipeline (same code as the real cluster)
-        self.pred = (PredictionPipeline(strategy, predictor)
-                     if strategy.mode == "pred" else None)
-        self.predictor = self.pred.predictor if self.pred else None
-        self.calibrator = self.pred.calibrator if self.pred else None
-        self.n_workers = n_workers
-        self.true_lat = true_lat
-        self.est = sched_est
-        self.mem = mem
-        self.rng = np.random.default_rng(seed)
-        self.noise_sigma = noise_sigma
-        self.ils_span = ils_span
-        self.workers = [_Worker(w) for w in range(n_workers)]
-        self.offloader: Offloader = (
-            MaxMinOffloader(n_workers) if strategy.offload == "maxmin"
-            else RoundRobinOffloader(n_workers))
-        self.pool: List[Request] = []
-        self._events: list = []
-        self._seq = itertools.count()
-        self._rr = 0
-        self.batch_sizes: List[int] = []
-        self.early_returns = 0
-        self.total_batches = 0
-        self.peak_parallel = 0  # max concurrent requests on one worker
-        self._lease_est: Dict[int, float] = {}
-        self.now = 0.0
+        backend = SimBackend(true_lat, noise_sigma=noise_sigma, seed=seed)
+        self.core = SchedulerCore(strategy, backend, n_workers, sched_est,
+                                  mem, predictor=predictor, ils_span=ils_span)
 
-    # ------------------------------------------------------------------
-    def _noise(self) -> float:
-        if self.noise_sigma <= 0:
-            return 1.0
-        return float(self.rng.lognormal(0.0, self.noise_sigma))
+    # --- legacy attribute surface (tests/benchmarks read these) ---
+    @property
+    def s(self) -> StrategyConfig:
+        return self.core.s
 
-    def _push(self, t: float, kind: str, payload=None):
-        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+    @property
+    def workers(self):
+        return self.core.workers
+
+    @property
+    def pool(self) -> List[Request]:
+        return self.core.pool
+
+    @property
+    def pred(self):
+        return self.core.pred
+
+    @property
+    def predictor(self):
+        return self.core.predictor
+
+    @property
+    def calibrator(self):
+        return self.core.calibrator
+
+    @property
+    def batch_sizes(self) -> List[int]:
+        return self.core.batch_sizes
+
+    @property
+    def batch_log(self) -> List[list]:
+        return self.core.batch_log
+
+    @property
+    def peak_parallel(self) -> int:
+        return self.core.peak_parallel
+
+    @property
+    def now(self) -> float:
+        return self.core.now
+
+    def _more_work_expected(self) -> bool:
+        return self.core._more_work_expected()
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], duration: float) -> SimResult:
-        for r in requests:
-            self._push(r.arrival, "arrival", r)
-        if self.s.mode in ("central", "cont_scls", "pred"):
-            self._push(0.0, "tick", None)
-        while self._events:
-            self.now, _, kind, payload = heapq.heappop(self._events)
-            getattr(self, f"_on_{kind}")(payload)
-        wct = [w.completion_time for w in self.workers]
-        metrics = compute_metrics(self.s.name, list(requests), duration, wct,
-                                  self.batch_sizes, self.early_returns,
-                                  self.total_batches)
-        return SimResult(metrics, list(requests), wct, self.batch_sizes)
-
-    # ------------------------------------------------------------------
-    # event handlers
-    # ------------------------------------------------------------------
-    def _on_arrival(self, req: Request):
-        if self.s.mode in ("central", "cont_scls", "pred"):
-            self.pool.append(req)
-        elif self.s.mode == "perreq":
-            w = self.workers[self._rr]
-            self._rr = (self._rr + 1) % self.n_workers
-            w.pending.append(req)
-            if not w.busy:
-                self._start_static_fcfs(w)
-        else:  # continuous
-            w = self.workers[self._rr]
-            self._rr = (self._rr + 1) % self.n_workers
-            w.pending.append(req)
-            if not w.busy:
-                self._continuous_step(w)
-
-    def _on_tick(self, _):
-        reqs, self.pool = self.pool, []
-        if reqs and self.s.mode == "cont_scls":
-            # beyond-paper: max-min placement of S-token *leases*; the
-            # worker itself is a continuous-batching engine, so the load a
-            # lease adds is its MARGINAL cost (the N-proportional part of
-            # Eq. 1-4), not the serial batch-of-one time
-            singles = []
-            for r in reqs:
-                L = r.effective_input_len
-                marginal = (self.est.t_serve(1, L, self.s.slice_len)
-                            - self.est.t_serve(0, L, self.s.slice_len))
-                self._lease_est[r.rid] = marginal
-                singles.append(Batch(requests=[r], input_len=L,
-                                     slice_len=self.s.slice_len,
-                                     est_time=marginal))
-            for w, b in self.offloader.assign(singles):
-                wk = self.workers[w]
-                wk.pending.append(b.requests[0])
-                if not wk.busy:
-                    self._continuous_step(wk)
-        elif reqs and self.s.mode == "pred":
-            # SCLS-PRED / ORACLE: calibrated predicted remaining-length
-            # caps pick the buckets and per-batch slice lengths
-            batches = self.pred.batches(reqs, self.est, self.mem)
-            for w, b in self.offloader.assign(batches):
-                wk = self.workers[w]
-                wk.queue.append(b)
-                if not wk.busy:
-                    self._start_batch(wk)
-        elif reqs:
-            cap = self.s.dp_cap if self.s.dp_cap else None
-            batches = dp_batch(reqs, self.s.slice_len, self.est, self.mem,
-                               max_batch_size=cap)
-            for w, b in self.offloader.assign(batches):
-                wk = self.workers[w]
-                wk.queue.append(b)
-                if not wk.busy:
-                    self._start_batch(wk)
-        if self.s.adaptive_interval:
-            dt = next_interval(self.offloader.min_load(), self.s.lam, self.s.gamma)
-        else:
-            dt = self.s.gamma
-        if self._more_work_expected():
-            self._push(self.now + dt, "tick", None)
-
-    def _more_work_expected(self) -> bool:
-        if self.pool:
-            return True
-        if any(e[2] == "arrival" for e in self._events):
-            return True
-        # pending/running cover continuous-mode workers whose admission is
-        # momentarily blocked (busy alone would miss leased-out work)
-        if any(w.queue or w.busy or w.pending or w.running
-               for w in self.workers):
-            return True
-        return False
-
-    def _feedback(self, req: Request) -> None:
-        """Online-learning hook: every completed request trains the
-        predictor and scores its latest calibrated prediction."""
-        if self.pred is not None:
-            self.pred.on_complete(req)
-
-    # ------------------------------------------------------------------
-    # static batch serving (perreq + central)
-    # ------------------------------------------------------------------
-    def _start_static_fcfs(self, w: _Worker):
-        if not w.pending:
-            return
-        n = self.s.fixed_batch_size or len(w.pending)
-        group = [w.pending.popleft() for _ in range(min(n, len(w.pending)))]
-        L = max(r.effective_input_len for r in group)
-        b = Batch(requests=group, input_len=bucket_len(L, self.est.bucket),
-                  slice_len=self.s.slice_len)
-        b.est_time = self.est.t_serve(b.size, b.input_len, self.s.slice_len)
-        w.queue.append(b)
-        self._start_batch(w)
-
-    def _start_batch(self, w: _Worker):
-        if w.busy or not w.queue:
-            return
-        b = w.queue.popleft()
-        steps = min(b.slice_len, max(r.remaining_gen for r in b.requests))
-        dur = self.true_lat.t_serve(b.size, b.input_len, steps) * self._noise()
-        w.busy = True
-        self._push(self.now + dur, "batch_done", (w.wid, b, steps))
-
-    def _on_batch_done(self, payload):
-        wid, b, steps = payload
-        w = self.workers[wid]
-        w.busy = False
-        w.completion_time = self.now
-        self.total_batches += 1
-        self.batch_sizes.append(b.size)
-        if steps < b.slice_len:
-            self.early_returns += 1
-        unfinished = []
-        for r in b.requests:
-            r.n_schedules += 1
-            r.pad_tokens += b.input_len - r.effective_input_len
-            gen_now = min(r.remaining_gen, steps)
-            r.invalid_tokens += steps - gen_now
-            r.generated += gen_now
-            if r.first_token_time is None:
-                r.first_token_time = self.now
-            if r.remaining_gen <= 0:
-                r.done = True
-                r.finish_time = self.now
-                self._feedback(r)
-            else:
-                unfinished.append(r)
-        self.offloader.on_batch_complete(wid, b.est_time)
-        if unfinished:
-            if self.s.mode in ("central", "pred"):
-                self.pool.extend(unfinished)
-            else:  # SO: re-send round-robin
-                for r in unfinished:
-                    tgt = self.workers[self._rr]
-                    self._rr = (self._rr + 1) % self.n_workers
-                    tgt.pending.append(r)
-                    if not tgt.busy:
-                        self._start_static_fcfs(tgt)
-        if self.s.mode == "perreq" and w.pending and not w.busy:
-            self._start_static_fcfs(w)
-        elif w.queue:
-            self._start_batch(w)
-
-    # ------------------------------------------------------------------
-    # continuous batching (ILS)
-    # ------------------------------------------------------------------
-    def _block_charge(self, eff_len: int) -> int:
-        """kv_layout="paged": blocks the joining request's envelope holds —
-        the slice lease S for cont_scls, the length-blind worst case
-        (max_gen remaining) for plain ILS.  Fixed for the request's stay,
-        exactly like the real engine's join-time ``reserve``."""
-        if self.s.kv_layout != "paged":
-            return 0
-        S = (self.s.slice_len if self.s.mode == "cont_scls"
-             else self.s.max_gen)
-        return self.mem.blocks_per_request(eff_len, S)
-
-    def _ils_token_budget_ok(self, w: _Worker, newreq: Request) -> bool:
-        if self.s.kv_layout == "paged":
-            # block-granular admission (repro.kvcache): each running
-            # request occupies exactly its reserved envelope rounded up to
-            # pages; the join fits iff the worker's pool has free blocks
-            assert isinstance(self.mem, PagedMemoryEstimator), \
-                "kv_layout='paged' needs a PagedMemoryEstimator"
-            used = sum(blocks for *_, blocks in w.running)
-            charge = self._block_charge(newreq.effective_input_len)
-            return used + charge <= self.mem.total_blocks
-        budget = self.s.max_cached_tokens
-        if budget is None and self.s.mode == "cont_scls":
-            # slices bound per-request growth to eff_len + S, so the exact
-            # memory budget applies (no conservative cap) — Eq. 5/9.
-            # NOTE: this is the *idealized* fragmentation-free allocator;
-            # kv_layout="paged" is the realizable version (block-rounded)
-            if hasattr(self.mem, "m_available") and self.mem.delta_bytes > 0:
-                budget = int(self.mem.zeta * self.mem.m_available
-                             / self.mem.delta_bytes)
-        if budget is None:
-            return True
-        tokens = sum(c + self.s.slice_len for _, c, _, _ in w.running)
-        return tokens + newreq.effective_input_len + self.s.slice_len <= budget
-
-    def _continuous_step(self, w: _Worker):
-        """Advance worker w: admit joins, then run a span of iterations."""
-        dur = 0.0
-        # admit (FCFS) under the conservative parallelism cap
-        lease = self.s.mode == "cont_scls"
-        while (w.pending and len(w.running) < self.s.max_parallel
-               and self._ils_token_budget_ok(w, w.pending[0])):
-            r = w.pending.popleft()
-            dur += self.true_lat.t_prefill(1, r.effective_input_len) * self._noise()
-            r.n_schedules += 1
-            w.running.append([r, r.effective_input_len,
-                              self.s.slice_len if lease else (1 << 30),
-                              self._block_charge(r.effective_input_len)])
-        if not w.running:
-            w.busy = False
-            return
-        w.busy = True
-        span = min(self.ils_span,
-                   min(min(r.remaining_gen, lease_left)
-                       for r, _, lease_left, _ in w.running))
-        span = max(span, 1)
-        N = len(w.running)
-        self.peak_parallel = max(self.peak_parallel, N)
-        avg_len = float(np.mean([c for _, c, _, _ in w.running]))
-        # Σ_{i=1..span} τ(avg+i, N) ≈ span · τ(avg + span/2, N)
-        dur += span * self.true_lat.tau_decode(avg_len + span / 2.0, N) * self._noise()
-        self._push(self.now + dur, "cont_done", (w.wid, span, N))
-
-    def _on_cont_done(self, payload):
-        wid, span, n_running = payload
-        w = self.workers[wid]
-        w.completion_time = self.now
-        self.batch_sizes.append(n_running)
-        self.total_batches += 1
-        still = []
-        expired = []
-        for r, c, lease_left, blocks in w.running:
-            r.generated += span
-            lease_left -= span
-            if r.first_token_time is None:
-                r.first_token_time = self.now
-            if r.remaining_gen <= 0:
-                r.done = True
-                r.finish_time = self.now
-                self._feedback(r)
-                self.offloader.on_batch_complete(
-                    w.wid, self._lease_est.pop(r.rid, 0.0))
-            elif lease_left <= 0:  # slice lease over -> back to the pool
-                expired.append(r)
-                self.offloader.on_batch_complete(
-                    w.wid, self._lease_est.pop(r.rid, 0.0))
-            else:
-                still.append([r, c + span, lease_left, blocks])
-        w.running = still
-        if expired:
-            self.pool.extend(expired)
-        self._continuous_step(w)
+        metrics = self.core.run(requests, duration)
+        return SimResult(metrics, list(requests),
+                         [w.completion_time for w in self.core.workers],
+                         self.core.batch_sizes)

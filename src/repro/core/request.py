@@ -15,19 +15,23 @@ class Request:
     iterations until EOS).  It is ground truth for the workload generator /
     engine and is NEVER read by any scheduler — schedulers only observe
     ``input_len``, ``generated`` and completion events, exactly as in the
-    paper.
+    paper.  ``gen_len=None`` (online submissions through
+    ``repro.serving``) means the length is unknown in advance: the real
+    backend decodes until the model's own EOS, the sim backend until
+    ``max_gen``.
     """
 
     rid: int
     arrival: float
     input_len: int
-    gen_len: int
+    gen_len: Optional[int]
     max_gen: int = 1024
     prompt: Optional[np.ndarray] = None  # actual tokens (real-execution mode)
 
     # --- scheduling state ---
     generated: int = 0
     done: bool = False
+    cancelled: bool = False  # terminal via SliceServer.cancel(), not EOS
     n_schedules: int = 0
     finish_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -43,7 +47,9 @@ class Request:
 
     @property
     def remaining_gen(self) -> int:
-        return min(self.gen_len, self.max_gen) - self.generated
+        cap = (self.max_gen if self.gen_len is None
+               else min(self.gen_len, self.max_gen))
+        return cap - self.generated
 
     def response_time(self) -> float:
         assert self.finish_time is not None

@@ -40,6 +40,12 @@ def _pow2_bucket(n: int) -> int:
     return p
 
 
+# Forced-length sentinel: a per-row forced length at/above this means "no
+# emulated EOS — decode until the model's own EOS token".  Shared protocol
+# with repro.serving.backends.RealBackend; fits int32 with headroom.
+EOS_DRIVEN = 1 << 30
+
+
 class StaticEngine:
     def __init__(self, model: Model, params, eos_id: int = 1,
                  pad_id: int = 0, len_bucket: int = 16,
@@ -120,7 +126,7 @@ class StaticEngine:
             tokens[i, L - len(e):] = e  # left padding
         lengths_p = np.concatenate([lengths, np.ones(B - B_raw, np.int32)])
         if forced_gen_lens is None:
-            forced = np.full((B,), 1 << 30, np.int32)
+            forced = np.full((B,), EOS_DRIVEN, np.int32)
         else:
             forced = np.concatenate([
                 np.asarray(forced_gen_lens, np.int32),
@@ -137,8 +143,13 @@ class StaticEngine:
         results = []
         for i in range(B_raw):
             toks = out[i, :steps]
-            if forced_gen_lens is not None:
-                n_valid = min(int(forced_gen_lens[i]), steps)
+            # per-row semantics: a forced length below the sentinel emulates
+            # a known EOS position; the sentinel (or no forced list) means
+            # EOS-driven — the model's own EOS token ends the row
+            f = (int(forced_gen_lens[i]) if forced_gen_lens is not None
+                 else EOS_DRIVEN)
+            if f < EOS_DRIVEN:
+                n_valid = min(f, steps)
             else:
                 eos_pos = np.where(toks == self.eos_id)[0]
                 n_valid = int(eos_pos[0]) + 1 if len(eos_pos) else steps

@@ -75,9 +75,24 @@ class PageAllocator:
         self._owned[owner] = pages
         return list(pages)
 
-    def release(self, owner: int) -> int:
-        """Return ``owner``'s pages to the free list; returns the count."""
-        pages = self._owned.pop(owner)
+    def release(self, owner: int, *, missing_ok: bool = False) -> int:
+        """Return ``owner``'s pages to the free list; returns the count.
+
+        Releasing an owner that holds nothing is a bug by default — the
+        classic shape is cancel-then-slice-end calling ``release`` twice,
+        which with a laxer allocator would silently double-free pages onto
+        the free list and hand the same page to two owners.  It raises a
+        descriptive ``KeyError``; pass ``missing_ok=True`` at call sites
+        where release is legitimately idempotent (then it is an explicit
+        no-op returning 0).
+        """
+        pages = self._owned.pop(owner, None)
+        if pages is None:
+            if missing_ok:
+                return 0
+            raise KeyError(
+                f"owner {owner} holds no pages — double release? "
+                f"(live owners: {sorted(self._owned)})")
         self._free.extend(pages)
         return len(pages)
 

@@ -1,107 +1,118 @@
-"""Serving launcher: run the full SCLS stack on real JAX engines.
+"""Serving launcher: run the full SCLS stack through the online
+``repro.serving`` API (SliceServer over one SchedulerCore).
 
+  # real JAX engines (default): every token really computed
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --workers 2 --rate 2 --duration 15 --strategy scls
+
+  # discrete-event sim backend (no model, CI smoke): same scheduler code
+  PYTHONPATH=src python -m repro.launch.serve --backend sim --duration 3
 
   # prediction-aware scheduling (repro.predict): online histogram predictor
   PYTHONPATH=src python -m repro.launch.serve --strategy scls-pred \
       --predictor histogram --coverage 0.7
 
-Profiles the engine, fits the Eq. 3/4 estimator, then drives the DP
-batcher + max-min offloader over in-process workers (virtual-time clocks;
-every token really computed).  On a real TPU cluster each worker becomes a
-mesh slice and the engine's jit functions land on devices unchanged.
+The real backend profiles the engine, fits the Eq. 3/4 estimator, then
+replays a Poisson trace through ``SliceServer`` — plus one *interactive*
+request submitted mid-run, streamed per slice, to exercise the online
+path (submit → tokens → result) a real deployment uses.  On a real TPU
+cluster each worker becomes a mesh slice and the engine's jit functions
+land on devices unchanged.
 """
 from __future__ import annotations
 
-import argparse
 import dataclasses
+import itertools
 import json
+import sys
 
-import jax
-import numpy as np
-
-from repro.cluster.realtime import RealCluster
 from repro.cluster.trace import WorkloadSpec, generate_trace
 from repro.configs import ARCHS, get_config
-from repro.core.memory import AnalyticMemoryEstimator, PagedMemoryEstimator
-from repro.core.schedulers import ALL_STRATEGIES, make_strategy
-from repro.engine.profiler import fit_estimator
-from repro.engine.static_engine import StaticEngine
-from repro.models.registry import get_model
-from repro.predict import PREDICTORS
-
-# RealCluster drives central-tick strategies (incl. prediction-aware ones)
-_SERVABLE = [s for s in ALL_STRATEGIES
-             if make_strategy(s).mode in ("central", "pred")]
+from repro.serving import ServingConfig, SliceServer, default_sim_environment
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b", choices=list(ARCHS))
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--workers", type=int, default=2)
-    ap.add_argument("--rate", type=float, default=2.0)
-    ap.add_argument("--duration", type=float, default=15.0)
-    ap.add_argument("--strategy", default="scls", choices=_SERVABLE)
-    ap.add_argument("--predictor", default="histogram", choices=list(PREDICTORS),
-                    help="length predictor for --strategy scls-pred")
-    ap.add_argument("--coverage", type=float, default=0.7,
-                    help="calibration target quantile for predicted caps")
-    ap.add_argument("--kv-layout", default="dense", choices=["dense", "paged"],
-                    help="worker KV layout (repro.kvcache): paged reserves "
-                         "slice envelopes block by block from a page pool")
-    ap.add_argument("--page-tokens", type=int, default=16,
-                    help="cache slots per KV block for --kv-layout paged")
-    ap.add_argument("--slice-len", type=int, default=8)
-    ap.add_argument("--max-gen", type=int, default=24)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    if not 0.0 < args.coverage < 1.0:
-        ap.error("--coverage must be in (0, 1)")
+def build_server(cfg: ServingConfig) -> tuple[SliceServer, int]:
+    """(server, vocab_size) for the configured backend."""
+    if cfg.backend == "sim":
+        true_lat, est, mem = default_sim_environment(
+            paged=cfg.kv_layout == "paged", page_tokens=cfg.page_tokens)
+        return cfg.build_sim(true_lat, est, mem), 0
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    if cfg.family not in ("dense", "moe", "ssm", "hybrid"):
+    import jax  # deferred: the sim path must not require a working model
+
+    from repro.engine.profiler import fit_estimator
+    from repro.engine.static_engine import StaticEngine
+    from repro.models.registry import get_model
+
+    if cfg.arch not in ARCHS:
+        raise SystemExit(f"unknown --arch {cfg.arch!r}; choose from "
+                         f"{sorted(ARCHS)}")
+    arch = get_config(cfg.arch, reduced=cfg.reduced)
+    if arch.family not in ("dense", "moe", "ssm", "hybrid"):
         raise SystemExit(f"serve launcher drives token-only archs; "
-                         f"{args.arch} needs frontend embeddings (use examples/)")
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    print(f"[serve] {args.arch} (reduced={args.reduced}), "
-          f"{args.workers} workers, strategy={args.strategy}")
-
+                         f"{cfg.arch} needs frontend embeddings (use examples/)")
+    model = get_model(arch)
+    params = model.init(jax.random.PRNGKey(cfg.seed))
     est, prmse, drmse = fit_estimator(model, params, batch_sizes=(1, 2, 4),
                                       input_lens=(16, 32, 64))
     print(f"[serve] estimator fitted: prefill rmse {prmse*1e3:.2f} ms, "
           f"decode rmse {drmse*1e3:.2f} ms")
-    if args.kv_layout == "paged":
-        mem = PagedMemoryEstimator(delta_bytes=model.kv_bytes_per_token(),
-                                   m_available=256e6, zeta=0.9,
-                                   page_tokens=args.page_tokens, bucket=8)
+    mem = cfg.memory_estimator(model.kv_bytes_per_token())
+    if cfg.kv_layout == "paged":
         print(f"[serve] paged KV: {mem.total_blocks} blocks of "
-              f"{args.page_tokens} tokens per worker")
-    else:
-        mem = AnalyticMemoryEstimator(delta_bytes=model.kv_bytes_per_token(),
-                                      m_available=256e6, zeta=0.9, bucket=8)
-    spec = WorkloadSpec("demo", input_mu=3.0, input_sigma=0.7, gen_mu=2.3,
-                        gen_sigma=0.7, max_input=64, max_gen=args.max_gen)
-    trace = generate_trace(args.rate, args.duration, spec, seed=args.seed,
-                           vocab_size=cfg.vocab_size)
+              f"{cfg.page_tokens} tokens per worker")
     engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)
-               for _ in range(args.workers)]
-    strategy = make_strategy(args.strategy, slice_len=args.slice_len,
-                             max_gen=args.max_gen, gamma=0.25,
-                             predictor=args.predictor, coverage=args.coverage,
-                             kv_layout=args.kv_layout)
-    cluster = RealCluster(strategy, engines, est, mem)
-    metrics = cluster.run(trace, args.duration)
+               for _ in range(cfg.workers)]
+    return cfg.build_real(engines, est, mem), arch.vocab_size
+
+
+def main() -> None:
+    cfg = ServingConfig.from_cli(
+        description=__doc__.splitlines()[0],
+        backend="real", workers=2, slice_len=8, max_gen=24, gamma=0.25,
+        rate=2.0, duration=15.0, mem_bucket=8)
+    print(f"[serve] backend={cfg.backend} strategy={cfg.strategy} "
+          f"workers={cfg.workers}"
+          + (f" arch={cfg.arch} (reduced={cfg.reduced})"
+             if cfg.backend == "real" else ""))
+    server, vocab = build_server(cfg)
+
+    spec = WorkloadSpec("demo", input_mu=3.0, input_sigma=0.7, gen_mu=2.3,
+                        gen_sigma=0.7, max_input=64, max_gen=cfg.max_gen)
+    trace = generate_trace(cfg.rate, cfg.duration, spec, seed=cfg.seed,
+                           vocab_size=vocab or None)
+    handles = server.replay(trace)
+
+    # one interactive request through the online path: submit mid-run,
+    # stream its tokens per slice, then read the finalized result
+    import numpy as np
+    rng = np.random.default_rng(cfg.seed + 1)
+    prompt = (rng.integers(0, vocab, size=12).astype(np.int32)
+              if vocab else None)
+    live = server.submit(prompt, input_len=12, gen_len=min(10, cfg.max_gen),
+                         max_gen=cfg.max_gen,
+                         arrival=min(cfg.duration / 2, 1.0))
+    streamed = list(itertools.islice(live.tokens(), 6))
+    print(f"[serve] interactive rid={live.rid} streamed "
+          f"{len(streamed)} tokens: {streamed}")
+    live.result()
+
+    metrics = server.drain(cfg.duration)
     print(json.dumps(dataclasses.asdict(metrics), indent=2))
-    if cluster.predictor is not None:
-        print(f"[serve] predictor={cluster.predictor.name} "
-              f"calibration scale={cluster.calibrator.scale:.2f} "
-              f"coverage={cluster.calibrator.empirical_coverage():.2f}")
-    done = [r for r in trace if r.done]
+    if server.core.predictor is not None:
+        print(f"[serve] predictor={server.core.predictor.name} "
+              f"calibration scale={server.core.calibrator.scale:.2f} "
+              f"coverage={server.core.calibrator.empirical_coverage():.2f}")
+    done = [h for h in handles if h.done]
     print(f"[serve] completed {len(done)}/{len(trace)}; "
-          f"sample output ({done[0].rid}): {done[0].output_tokens[:12]}")
+          f"TTFT mean {metrics.ttft_mean:.3f}s, "
+          f"p99 latency {metrics.p99_response:.3f}s")
+    if done:
+        print(f"[serve] sample output ({done[0].rid}): "
+              f"{done[0].output_tokens[:12]}")
+    if not done or not live.done:
+        print("[serve] FAILED: no completed requests", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""repro.serving — the request-level serving front end.
+
+One :class:`SchedulerCore` implements the scheduling loop (arrival intake
+→ predict → DP batch → max-min offload → slice dispatch → re-enqueue)
+for *every* runtime; a :class:`Backend` supplies the physics
+(:class:`SimBackend`: calibrated latency models in virtual time;
+:class:`RealBackend`: real JAX engines, measured wall time).  On top,
+:class:`SliceServer` exposes the online API a real deployment needs —
+``submit`` / per-slice token streaming / ``cancel`` / ``drain`` — and
+:class:`ServingConfig` is the one validated configuration object for all
+of it.
+
+The legacy offline entry points (``repro.cluster.simulator.
+ClusterSimulator``, ``repro.cluster.realtime.RealCluster``) remain as
+thin shims over this package.
+"""
+from repro.serving.backends import (Backend, BatchExecution, RealBackend,
+                                    SimBackend)
+from repro.serving.config import (SERVABLE_REAL, ServingConfig,
+                                  default_sim_environment, fitted_estimator)
+from repro.serving.core import SchedulerCore, WorkerState
+from repro.serving.server import RequestHandle, SliceServer
+
+__all__ = [
+    "Backend", "BatchExecution", "RealBackend", "RequestHandle",
+    "SERVABLE_REAL", "SchedulerCore", "ServingConfig", "SimBackend",
+    "SliceServer", "WorkerState", "default_sim_environment",
+    "fitted_estimator",
+]

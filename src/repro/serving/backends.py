@@ -1,0 +1,231 @@
+"""Execution backends for :class:`repro.serving.core.SchedulerCore`.
+
+The scheduling loop (arrival intake → predict → DP batch → offload →
+slice dispatch → re-enqueue) lives exactly once, in ``SchedulerCore``;
+what *varies* between the discrete-event simulator and the real cluster
+is only how a dispatched unit of work turns into a duration and token
+outcomes.  That variation is this module's ``Backend`` protocol:
+
+  * :class:`SimBackend` — durations come from a calibrated ground-truth
+    latency model (optionally noisy), token outcomes are derived
+    analytically from each request's true generation length.  Streamed
+    token ids are *synthetic* (the generation indices ``0,1,2,...``,
+    synthesized lazily by the handle) so the streaming API behaves
+    identically on both backends.
+  * :class:`RealBackend` — batches run on real JAX
+    :class:`~repro.engine.static_engine.StaticEngine` workers (every FLOP
+    real), durations are measured wall time, token outcomes come from the
+    model.  With ``kv_layout="paged"`` each worker owns a real
+    :class:`~repro.kvcache.PageAllocator`; the ``(L_i + S)`` slice
+    envelope is reserved at dispatch and released when the core processes
+    the slice-completion event, so mid-flight state (including
+    cancellation) is always visible in the free-block count.
+
+Backends are intentionally *stateless about scheduling*: they never see
+the pool, the offloader, or the predictor.  A new backend (e.g. an RPC
+worker fleet) only has to answer "run this batch" and "the slice is
+over".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.estimator import ServingTimeEstimator
+from repro.core.memory import MemoryEstimator, PagedMemoryEstimator
+from repro.core.request import Batch, Request
+from repro.engine.static_engine import EOS_DRIVEN, StaticEngine
+from repro.kvcache import PageAllocator
+
+# Per-request outcome dict keys (shared with StaticEngine.serve_batch
+# results): tokens, n_valid, invalid, pad, finished.
+RequestOutcome = Dict[str, object]
+
+
+@dataclasses.dataclass
+class BatchExecution:
+    """What happened to one dispatched slice.
+
+    ``per_request`` is aligned with ``Batch.requests``; ``tokens`` are the
+    valid tokens this slice produced for that request — real model tokens
+    on the real backend, or ``None`` on the sim backend (sim token ids are
+    by definition the generation indices ``0..generated-1``, so streaming
+    consumers synthesize them lazily instead of the core materializing
+    millions of ints during offline paper-scale replays).
+    ``finished`` marks EOS/forced completion as observed by the engine.
+    """
+
+    duration: float
+    steps: int
+    early_return: bool
+    per_request: List[RequestOutcome]
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a SchedulerCore needs from an execution substrate."""
+
+    #: whether continuous-batching modes (ILS / SCLS-CB) can run here
+    supports_continuous: bool
+
+    def run_batch(self, wid: int, batch: Batch,
+                  prev_tokens: Sequence[Sequence[int]]) -> BatchExecution:
+        """Execute ``batch`` for one slice on worker ``wid``.
+
+        Called at dispatch time; ``prev_tokens`` holds each member's
+        previously generated tokens (the SCLS re-prefill input).  The
+        returned ``duration`` is *virtual* time — the core schedules the
+        completion event, applies token accounting, and re-enqueues
+        unfinished requests when it fires.
+        """
+        ...
+
+    def finish_batch(self, wid: int, batch: Batch) -> None:
+        """The slice-completion event for ``batch`` is being processed:
+        release any per-slice resources (e.g. the paged KV envelope)."""
+        ...
+
+    def prefill_time(self, req: Request) -> float:
+        """Continuous modes: virtual cost of one request's join prefill."""
+        ...
+
+    def span_time(self, avg_len: float, span: int, n_running: int) -> float:
+        """Continuous modes: virtual cost of ``span`` decode iterations at
+        parallelism ``n_running`` and mean cached length ``avg_len``."""
+        ...
+
+
+class SimBackend:
+    """Latency-model backend: the discrete-event simulator's physics.
+
+    The scheduler consults its own fitted estimator; *this* backend
+    consumes time from the ground-truth profile ``true_lat`` (optionally
+    log-normal noisy), so estimation error and its consequences are
+    modeled faithfully — exactly the legacy ``ClusterSimulator`` split.
+    """
+
+    supports_continuous = True
+
+    def __init__(self, true_lat: ServingTimeEstimator,
+                 noise_sigma: float = 0.0, seed: int = 0):
+        self.true_lat = true_lat
+        self.noise_sigma = float(noise_sigma)
+        self.rng = np.random.default_rng(seed)
+
+    def _noise(self) -> float:
+        if self.noise_sigma <= 0:
+            return 1.0
+        return float(self.rng.lognormal(0.0, self.noise_sigma))
+
+    # ------------------------------------------------------------------
+    def run_batch(self, wid: int, batch: Batch,
+                  prev_tokens: Sequence[Sequence[int]]) -> BatchExecution:
+        steps = min(batch.slice_len,
+                    max(r.remaining_gen for r in batch.requests))
+        dur = self.true_lat.t_serve(batch.size, batch.input_len,
+                                    steps) * self._noise()
+        per: List[RequestOutcome] = []
+        for r in batch.requests:
+            remaining = r.remaining_gen
+            gen_now = min(remaining, steps)
+            per.append(dict(
+                tokens=None,  # sim: synthesized lazily (generation indices)
+                n_valid=gen_now,
+                invalid=steps - gen_now,
+                pad=batch.input_len - r.effective_input_len,
+                finished=remaining - gen_now <= 0))
+        return BatchExecution(duration=dur, steps=steps,
+                              early_return=steps < batch.slice_len,
+                              per_request=per)
+
+    def finish_batch(self, wid: int, batch: Batch) -> None:
+        pass  # no per-slice resources in virtual time
+
+    def prefill_time(self, req: Request) -> float:
+        return self.true_lat.t_prefill(
+            1, req.effective_input_len) * self._noise()
+
+    def span_time(self, avg_len: float, span: int, n_running: int) -> float:
+        # Σ_{i=1..span} τ(avg+i, N) ≈ span · τ(avg + span/2, N)
+        return span * self.true_lat.tau_decode(
+            avg_len + span / 2.0, n_running) * self._noise()
+
+
+class RealBackend:
+    """Real-execution backend: StaticEngine workers, measured wall time.
+
+    One physical host runs all engines, so each worker's timeline is
+    virtual — the core advances it by the measured wall time of that
+    worker's own batches, which is exactly what N parallel machines would
+    observe.  Token outcomes (EOS, invalid, pads) come from the engine.
+
+    ``kv_layout="paged"``: each worker gets a real
+    :class:`~repro.kvcache.PageAllocator`; ``run_batch`` reserves every
+    member's ``(L_i + S)`` envelope and ``finish_batch`` releases it, so
+    a MemoryError here means the DP batcher violated its own no-OOM
+    constraint.  Continuous modes are not supported (the ILS baseline on
+    real JAX lives in ``repro.engine.continuous_engine``).
+    """
+
+    supports_continuous = False
+
+    def __init__(self, engines: Sequence[StaticEngine],
+                 mem: Optional[MemoryEstimator] = None,
+                 kv_layout: str = "dense",
+                 sched_bucket: int = 1):
+        self.engines = list(engines)
+        self.allocators: Optional[List[PageAllocator]] = None
+        if kv_layout == "paged":
+            if not isinstance(mem, PagedMemoryEstimator):
+                raise TypeError("kv_layout='paged' needs a PagedMemoryEstimator")
+            if mem.bucket % sched_bucket:
+                # fits() admits with mem.bucket over raw lengths, while the
+                # slice-start reserve charges the batch input length (est-
+                # bucketed); mem.bucket must be a multiple of est.bucket so
+                # admission is at least as conservative as the reserve —
+                # otherwise a legitimately admitted batch can MemoryError
+                raise ValueError(
+                    f"PagedMemoryEstimator.bucket ({mem.bucket}) must be a "
+                    f"multiple of the estimator bucket ({sched_bucket})")
+            self.allocators = [PageAllocator(mem.total_blocks, mem.page_tokens)
+                               for _ in self.engines]
+
+    # ------------------------------------------------------------------
+    def run_batch(self, wid: int, batch: Batch,
+                  prev_tokens: Sequence[Sequence[int]]) -> BatchExecution:
+        eng = self.engines[wid]
+        prompts = [r.prompt for r in batch.requests]
+        # gen_len=None → EOS-driven: the engine detects the model's own EOS
+        forced = [r.remaining_gen if r.gen_len is not None else EOS_DRIVEN
+                  for r in batch.requests]
+        if self.allocators is not None:
+            alloc = self.allocators[wid]
+            for r in batch.requests:
+                # slice start: every member holds the batch envelope
+                # L_i + S (rows are padded to the batch input length,
+                # as the engine's per-batch cache is)
+                alloc.reserve(r.rid, batch.input_len + batch.slice_len)
+        res = eng.serve_batch(prompts, batch.slice_len,
+                              forced_gen_lens=forced,
+                              already_generated=list(prev_tokens))
+        return BatchExecution(duration=res.wall_time, steps=res.steps,
+                              early_return=res.early_return,
+                              per_request=list(res.results))
+
+    def finish_batch(self, wid: int, batch: Batch) -> None:
+        if self.allocators is not None:
+            alloc = self.allocators[wid]
+            for r in batch.requests:  # slice end: envelope freed
+                alloc.release(r.rid)
+
+    def prefill_time(self, req: Request) -> float:
+        raise NotImplementedError(
+            "RealBackend does not run continuous modes; use "
+            "repro.engine.continuous_engine.ContinuousEngine")
+
+    def span_time(self, avg_len: float, span: int, n_running: int) -> float:
+        raise NotImplementedError(
+            "RealBackend does not run continuous modes; use "
+            "repro.engine.continuous_engine.ContinuousEngine")

@@ -1,0 +1,320 @@
+"""One validated configuration object for the whole serving stack.
+
+Before this module, every benchmark/example/CLI call site re-derived the
+same wiring by hand: build a latency profile, "profile" it with noise,
+fit the Eq. 3/4 estimator, pick a memory estimator, call
+``make_strategy``, construct a cluster.  ``ServingConfig`` collapses that
+into one dataclass with validation of strategy × kv_layout × predictor ×
+backend combinations, ``from_cli()`` / ``from_dict()`` constructors, and
+builders that hand back a ready :class:`~repro.serving.server.SliceServer`.
+
+    server = ServingConfig(strategy="scls", workers=4).build_sim()
+    server = ServingConfig.from_cli().build_sim()        # launchers
+    server = cfg.build_real(engines, sched_est, mem)     # real engines
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.estimator import (ServingTimeEstimator,
+                                  a100_llama13b_hf_profile,
+                                  a100_llama13b_profile)
+from repro.core.memory import (A100_80GB_AVAILABLE, AnalyticMemoryEstimator,
+                               LLAMA2_13B_DELTA, MemoryEstimator,
+                               PagedMemoryEstimator, RuleBasedMemoryEstimator)
+from repro.core.schedulers import ALL_STRATEGIES, StrategyConfig, make_strategy
+from repro.predict import PREDICTORS
+from repro.serving.backends import RealBackend, SimBackend
+from repro.serving.core import CONTINUOUS_MODES, SchedulerCore
+from repro.serving.server import SliceServer
+
+#: strategies a RealBackend can drive (no continuous modes on StaticEngine)
+SERVABLE_REAL = tuple(
+    s for s in ALL_STRATEGIES
+    if make_strategy(s).mode not in CONTINUOUS_MODES)
+
+_PRED_STRATEGIES = ("scls-pred", "oracle")
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    """Everything needed to stand up a serving stack, in one place."""
+
+    # --- scheduling ---
+    strategy: str = "scls"
+    backend: str = "sim"                 # "sim" | "real"
+    workers: int = 2
+    slice_len: int = 128
+    max_gen: int = 1024
+    fixed_batch_size: int = 12
+    gamma: float = 3.0                   # Γ: minimal schedule interval (s)
+    lam: float = 0.5                     # λ in Eq. 12
+    max_parallel: int = 12               # ILS conservative cap
+    ils_span: int = 32
+    # --- KV layout (repro.kvcache) ---
+    kv_layout: str = "dense"             # "dense" | "paged"
+    page_tokens: int = 16
+    # --- generation-length prediction (repro.predict) ---
+    predictor: Optional[str] = None      # scls-pred/oracle only
+    coverage: float = 0.7
+    bucket_phi: float = 2.0
+    # --- sim backend ---
+    noise_sigma: float = 0.0
+    seed: int = 0
+    # --- real backend model/memory knobs ---
+    arch: str = "llama3.2-1b"
+    reduced: bool = True
+    m_available: float = 256e6
+    zeta: float = 0.9
+    mem_bucket: int = 8
+    # --- workload knobs consumed by launchers (trace replay) ---
+    rate: float = 2.0
+    duration: float = 15.0
+
+    def __post_init__(self) -> None:
+        self.validate()
+
+    # ------------------------------------------------------------------
+    def validate(self) -> None:
+        """Reject invalid strategy × kv_layout × predictor × backend combos
+        with actionable messages (called from ``__post_init__``)."""
+        if self.strategy not in ALL_STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"choose from {ALL_STRATEGIES}")
+        if self.backend not in ("sim", "real"):
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(expected 'sim' or 'real')")
+        if self.kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {self.kv_layout!r} "
+                             f"(expected 'dense' or 'paged')")
+        if self.predictor is not None:
+            if self.predictor not in PREDICTORS:
+                raise ValueError(f"unknown predictor {self.predictor!r}; "
+                                 f"choose from {tuple(PREDICTORS)}")
+            if self.strategy not in _PRED_STRATEGIES:
+                raise ValueError(
+                    f"predictor={self.predictor!r} needs a prediction-aware "
+                    f"strategy ({', '.join(_PRED_STRATEGIES)}); "
+                    f"got {self.strategy!r}")
+        if self.strategy == "oracle" and self.predictor not in (None, "perfect"):
+            raise ValueError(
+                "oracle is by definition scls-pred with the perfect "
+                f"predictor; predictor={self.predictor!r} contradicts it "
+                "(use strategy='scls-pred' for imperfect predictors)")
+        if self.backend == "real" and self.strategy not in SERVABLE_REAL:
+            raise ValueError(
+                f"strategy {self.strategy!r} runs continuous batching, "
+                f"which the real backend does not drive (use backend='sim' "
+                f"or one of {SERVABLE_REAL})")
+        if not 0.0 < self.coverage < 1.0:
+            raise ValueError(f"coverage must be in (0, 1), got {self.coverage}")
+        if self.workers <= 0:
+            raise ValueError(f"need at least one worker, got {self.workers}")
+        if self.slice_len <= 0 or self.max_gen <= 0:
+            raise ValueError("slice_len and max_gen must be positive")
+        if self.page_tokens <= 0:
+            raise ValueError(f"page_tokens must be positive, "
+                             f"got {self.page_tokens}")
+        if self.bucket_phi <= 1.0:
+            raise ValueError(f"bucket_phi must be > 1, got {self.bucket_phi}")
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ServingConfig":
+        """Construct from a plain mapping; unknown keys are an error."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - fields)
+        if unknown:
+            raise ValueError(f"unknown ServingConfig keys: {unknown}")
+        return cls(**dict(d))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def add_cli_args(cls, ap: argparse.ArgumentParser) -> None:
+        """Register the shared serving flags on an existing parser."""
+        ap.add_argument("--strategy", default=cls.strategy,
+                        choices=ALL_STRATEGIES)
+        ap.add_argument("--backend", default=cls.backend,
+                        choices=["sim", "real"])
+        ap.add_argument("--workers", type=int, default=cls.workers)
+        ap.add_argument("--slice-len", type=int, default=cls.slice_len)
+        ap.add_argument("--max-gen", type=int, default=cls.max_gen)
+        ap.add_argument("--fixed-batch-size", type=int,
+                        default=cls.fixed_batch_size)
+        ap.add_argument("--gamma", type=float, default=cls.gamma)
+        ap.add_argument("--max-parallel", type=int, default=cls.max_parallel)
+        ap.add_argument("--kv-layout", default=cls.kv_layout,
+                        choices=["dense", "paged"],
+                        help="worker KV layout (repro.kvcache): paged "
+                             "reserves slice envelopes block by block")
+        ap.add_argument("--page-tokens", type=int, default=cls.page_tokens,
+                        help="cache slots per KV block for --kv-layout paged")
+        ap.add_argument("--predictor", default=None, choices=list(PREDICTORS),
+                        help="length predictor for --strategy scls-pred")
+        ap.add_argument("--coverage", type=float, default=cls.coverage,
+                        help="calibration target quantile for predicted caps")
+        ap.add_argument("--noise-sigma", type=float, default=cls.noise_sigma)
+        ap.add_argument("--seed", type=int, default=cls.seed)
+        ap.add_argument("--arch", default=cls.arch)
+        ap.add_argument("--reduced", action="store_true", default=cls.reduced)
+        ap.add_argument("--rate", type=float, default=cls.rate)
+        ap.add_argument("--duration", type=float, default=cls.duration)
+
+    @classmethod
+    def from_cli(cls, argv: Optional[Sequence[str]] = None,
+                 description: str = "SCLS serving stack",
+                 **defaults: Any) -> "ServingConfig":
+        """Parse the shared serving flags into a validated config.
+
+        ``defaults`` override the dataclass defaults (launchers pick their
+        own demo-scale values) but never a flag the user actually passed.
+        """
+        ap = argparse.ArgumentParser(description=description)
+        cls.add_cli_args(ap)
+        if defaults:
+            unknown = sorted(set(defaults)
+                             - {f.name for f in dataclasses.fields(cls)})
+            if unknown:
+                raise ValueError(f"unknown ServingConfig defaults: {unknown}")
+            ap.set_defaults(**defaults)
+        args = vars(ap.parse_args(argv))
+        try:
+            return cls.from_dict(args)
+        except ValueError as e:
+            ap.error(str(e))
+            raise  # unreachable; keeps type checkers honest
+
+    # ------------------------------------------------------------------
+    # builders
+    # ------------------------------------------------------------------
+    def strategy_config(self) -> StrategyConfig:
+        return make_strategy(self.strategy, slice_len=self.slice_len,
+                             max_gen=self.max_gen,
+                             fixed_batch_size=self.fixed_batch_size,
+                             gamma=self.gamma, lam=self.lam,
+                             max_parallel=self.max_parallel,
+                             predictor=self.predictor or "histogram",
+                             coverage=self.coverage,
+                             bucket_phi=self.bucket_phi,
+                             kv_layout=self.kv_layout)
+
+    def memory_estimator(self, delta_bytes: float,
+                         m_available: Optional[float] = None
+                         ) -> MemoryEstimator:
+        """The memory model matching this config's kv_layout (Eq. 5–9 /
+        block pool)."""
+        m_ava = self.m_available if m_available is None else m_available
+        if self.kv_layout == "paged":
+            return PagedMemoryEstimator(delta_bytes=delta_bytes,
+                                        m_available=m_ava, zeta=self.zeta,
+                                        page_tokens=self.page_tokens,
+                                        bucket=self.mem_bucket)
+        return AnalyticMemoryEstimator(delta_bytes=delta_bytes,
+                                       m_available=m_ava, zeta=self.zeta,
+                                       bucket=self.mem_bucket)
+
+    def build_sim(self, true_lat: Optional[ServingTimeEstimator] = None,
+                  sched_est: Optional[ServingTimeEstimator] = None,
+                  mem: Optional[MemoryEstimator] = None,
+                  engine_profile: str = "ds") -> SliceServer:
+        """SliceServer over the discrete-event SimBackend.
+
+        With no estimators given, the full paper testbed is built
+        (``default_sim_environment``: A100/LLaMA2-13B profile, fitted
+        estimator, DS rule table or HF analytic memory).  Partially
+        specified setups stay *self-consistent*: a missing ``sched_est``
+        is fitted from the given ``true_lat`` and a missing ``mem``
+        defaults to the analytic (or paged) A100 model — never the DS
+        rule table, which is only the all-defaults "ds" behavior.
+        """
+        if true_lat is None and sched_est is None and mem is None:
+            true_lat, sched_est, mem = default_sim_environment(
+                engine_profile, paged=self.kv_layout == "paged",
+                page_tokens=self.page_tokens)
+        else:
+            if true_lat is None:
+                if engine_profile not in _PROFILES:
+                    raise ValueError(
+                        f"unknown engine profile {engine_profile!r}")
+                true_lat = _PROFILES[engine_profile]()
+            if sched_est is None:
+                sched_est = fitted_estimator(true_lat)
+            if mem is None:
+                mem = self.memory_estimator(LLAMA2_13B_DELTA,
+                                            m_available=A100_80GB_AVAILABLE)
+        backend = SimBackend(true_lat, noise_sigma=self.noise_sigma,
+                             seed=self.seed)
+        core = SchedulerCore(self.strategy_config(), backend, self.workers,
+                             sched_est, mem, ils_span=self.ils_span)
+        return SliceServer(core)
+
+    def build_real(self, engines: Sequence[Any],
+                   sched_est: ServingTimeEstimator,
+                   mem: MemoryEstimator) -> SliceServer:
+        """SliceServer over real StaticEngine workers (one per engine)."""
+        backend = RealBackend(engines, mem=mem, kv_layout=self.kv_layout,
+                              sched_bucket=sched_est.bucket)
+        core = SchedulerCore(self.strategy_config(), backend, len(engines),
+                             sched_est, mem, ils_span=self.ils_span)
+        return SliceServer(core)
+
+    def build(self, **kwargs: Any) -> SliceServer:
+        """Dispatch on ``backend`` (build_real needs engines/sched_est/mem)."""
+        if self.backend == "real":
+            return self.build_real(**kwargs)
+        return self.build_sim(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# the paper-testbed wiring, centralized (was copy-pasted at ~15 call sites)
+# ---------------------------------------------------------------------------
+_PROFILES = {"ds": a100_llama13b_profile, "hf": a100_llama13b_hf_profile}
+
+
+def fitted_estimator(true_lat: ServingTimeEstimator,
+                     seed: int = 0) -> ServingTimeEstimator:
+    """'Profile' the ground-truth latency model with 2% measurement noise
+    and fit Eq. 3/4 — mirrors the paper's one-time profiling step."""
+    rng = np.random.default_rng(seed)
+    pre = [(N, L, true_lat.t_prefill(N, L) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    dec = [(N, L, true_lat.tau_decode(L, N) * rng.lognormal(0, 0.02))
+           for N in (1, 2, 4, 8, 16, 32) for L in (16, 128, 512, 1024)]
+    est, _, _ = ServingTimeEstimator.fit(pre, dec)
+    return est
+
+
+def default_sim_environment(
+        engine_profile: str = "ds", fit_seed: int = 0, paged: bool = False,
+        page_tokens: int = 16,
+        ) -> Tuple[ServingTimeEstimator, ServingTimeEstimator,
+                   MemoryEstimator]:
+    """(ground-truth latency, fitted scheduler estimator, memory model)
+    for the paper's A100/LLaMA2-13B testbed.
+
+    ``engine_profile``: "ds" (DeepSpeed; Algorithm 2 rule table) or "hf"
+    (HuggingFace; Eq. 5–9 analytic model), as in §5.1.
+    """
+    if engine_profile not in _PROFILES:
+        raise ValueError(f"unknown engine profile {engine_profile!r} "
+                         f"(expected one of {tuple(_PROFILES)})")
+    true_lat = _PROFILES[engine_profile]()
+    est = fitted_estimator(true_lat, seed=fit_seed)
+    mem: MemoryEstimator
+    if paged:
+        mem = PagedMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                   m_available=A100_80GB_AVAILABLE,
+                                   zeta=0.9, page_tokens=page_tokens)
+    elif engine_profile == "ds":
+        mem = RuleBasedMemoryEstimator()
+    else:
+        mem = AnalyticMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                      m_available=A100_80GB_AVAILABLE,
+                                      zeta=0.9)
+    return true_lat, est, mem

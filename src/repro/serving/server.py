@@ -1,0 +1,209 @@
+"""Request-level online serving API over one :class:`SchedulerCore`.
+
+The offline runtimes take a fully pre-materialized trace and a duration;
+``SliceServer`` is what a real SCLS deployment needs instead: requests
+are *submitted* while the system runs, their tokens are observable per
+slice as they are produced, and they can be cancelled mid-flight.
+
+    server = ServingConfig(strategy="scls", workers=4).build_sim()
+    h = server.submit(input_len=64, gen_len=200)
+    for tok in h.tokens():          # streams per-slice, driving the core
+        ...
+    h2 = server.submit(input_len=32, gen_len=500)
+    h2.cancel()                     # frees its page envelope mid-flight
+    server.drain()                  # completes all in-flight work
+
+Time is virtual on both backends (the real backend measures wall time per
+batch but keeps per-worker virtual clocks), so the server is a
+*synchronous* reactor: every ``tokens()`` / ``result()`` / ``drain()``
+call advances the shared event queue.  Online arrivals enter the exact
+same batching/offloading algorithms (Alg. 1–2) the offline path uses —
+there is no second scheduler.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.metrics import RunMetrics
+from repro.core.request import Request
+from repro.serving.core import SchedulerCore
+
+
+class RequestHandle:
+    """Live view of one submitted request."""
+
+    def __init__(self, server: "SliceServer", request: Request):
+        self._server = server
+        self.request = request
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def finished(self) -> bool:
+        """Terminal (completed or cancelled)."""
+        return self._server.core.is_finalized(self.rid)
+
+    @property
+    def done(self) -> bool:
+        """Completed successfully."""
+        return self.finished and self.request.done
+
+    @property
+    def cancelled(self) -> bool:
+        return self.request.cancelled
+
+    def _tokens_so_far(self) -> Sequence[int]:
+        toks = self._server.core.token_log.get(self.rid)
+        if toks is not None:  # real backend, mid-flight
+            return toks
+        if self.finished and self.request.output_tokens is not None:
+            return self.request.output_tokens  # real backend, terminal
+        # sim backend: token ids are by definition the generation indices
+        return range(self.request.generated)
+
+    @property
+    def output_tokens(self) -> List[int]:
+        """Tokens produced so far (all of them once terminal)."""
+        return list(self._tokens_so_far())
+
+    def tokens(self) -> Iterator[int]:
+        """Stream this request's tokens as slices complete.
+
+        Tokens materialize at slice boundaries (a slice is the atom of
+        scheduling); the iterator advances the server's event queue while
+        it waits, so consuming it also serves everything else in flight.
+        On the sim backend token ids are synthetic generation indices.
+        """
+        cursor = 0
+        while True:
+            toks = self._tokens_so_far()
+            while cursor < len(toks):
+                yield toks[cursor]
+                cursor += 1
+            if self.finished:
+                return
+            if not self._server.core.step():  # same contract as result()
+                raise RuntimeError(
+                    f"request {self.rid} cannot make progress: the event "
+                    f"queue is empty but it never finalized")
+
+    def result(self) -> Request:
+        """Drive the server until this request is terminal; returns the
+        finalized :class:`Request` (tokens in ``output_tokens``)."""
+        while not self.finished:
+            if not self._server.core.step():
+                raise RuntimeError(
+                    f"request {self.rid} cannot make progress: the event "
+                    f"queue is empty but it never finalized")
+        return self.request
+
+    def cancel(self) -> bool:
+        """Cancel this request — see :meth:`SchedulerCore.cancel`."""
+        return self._server.cancel(self.rid)
+
+
+#: server-assigned request ids live in their own namespace so interactive
+#: ``submit`` calls never collide with trace rids (0..n) fed to ``replay``
+_SERVER_RID_BASE = 1 << 32
+
+
+class SliceServer:
+    """Submit / stream / cancel front end over one shared SchedulerCore."""
+
+    def __init__(self, core: SchedulerCore):
+        self.core = core
+        self._next_rid = itertools.count(_SERVER_RID_BASE)
+        self._handles: dict[int, RequestHandle] = {}
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    @property
+    def strategy(self):
+        return self.core.s
+
+    @property
+    def now(self) -> float:
+        return self.core.now
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Optional[np.ndarray] = None, *,
+               input_len: Optional[int] = None,
+               gen_len: Optional[int] = None,
+               max_gen: int = 1024,
+               arrival: Optional[float] = None) -> RequestHandle:
+        """Submit one request; returns a handle immediately.
+
+        ``prompt`` (token ids) is required on the real backend and
+        optional on the sim backend (``input_len`` suffices there).
+        ``gen_len`` emulates a known EOS position — the repo-wide
+        controlled-replay convention; pass None to decode until the
+        model's own EOS (real backend) or ``max_gen`` (sim backend).
+        ``arrival`` defaults to the server's current virtual time.
+        """
+        if self._closed:
+            raise RuntimeError("server is closed")
+        if prompt is None and input_len is None:
+            raise ValueError("need a prompt or an input_len")
+        if prompt is not None:
+            prompt = np.asarray(prompt, np.int32)
+            if input_len is None:
+                input_len = int(prompt.shape[0])
+        rid = next(self._next_rid)
+        while rid in self.core._by_rid:  # replay() may have taken ids
+            rid = next(self._next_rid)
+        req = Request(rid=rid, arrival=self.core.now, input_len=int(input_len),
+                      gen_len=None if gen_len is None else int(gen_len),
+                      max_gen=int(max_gen), prompt=prompt)
+        self.core.submit(req, arrival=arrival)
+        h = RequestHandle(self, req)
+        self._handles[rid] = h
+        return h
+
+    def replay(self, requests: Sequence[Request]) -> List[RequestHandle]:
+        """Submit pre-built trace requests (mutated in place, like the
+        legacy ``run()`` path — deep-copy the trace to keep it)."""
+        if self._closed:
+            raise RuntimeError("server is closed")
+        handles = []
+        for r in requests:
+            self.core.submit(r)
+            h = RequestHandle(self, r)
+            self._handles[r.rid] = h
+            handles.append(h)
+        return handles
+
+    # ------------------------------------------------------------------
+    def cancel(self, rid: int) -> bool:
+        return self.core.cancel(rid)
+
+    def step(self) -> bool:
+        """Advance the shared event queue by one event."""
+        return self.core.step()
+
+    def drain(self, duration: Optional[float] = None) -> RunMetrics:
+        """Complete all in-flight work; returns the run metrics so far."""
+        self.core.run_until_idle()
+        return self.core.metrics(duration)
+
+    def metrics(self, duration: Optional[float] = None) -> RunMetrics:
+        return self.core.metrics(duration)
+
+    def close(self, duration: Optional[float] = None) -> RunMetrics:
+        """Drain and refuse further submissions."""
+        m = self.drain(duration)
+        self._closed = True
+        return m
+
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "SliceServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if exc == (None, None, None):
+            self.close()
+        # on error, don't mask it by draining

@@ -188,3 +188,31 @@ def test_max_batch_size_cap_does_not_change_bounded_answers():
     rule = RuleBasedMemoryEstimator()  # generic bisection path
     assert rule.max_batch_size(1000, 128) == 12
     assert rule.max_batch_size(100, 128) == 28
+
+
+def test_allocator_double_release_raises_without_corruption():
+    """Satellite regression: releasing an owner that holds nothing raises
+    a descriptive error instead of silently corrupting the free list, and
+    ``missing_ok=True`` is the explicit idempotent escape hatch."""
+    a = PageAllocator(n_pages=4, page_tokens=8)
+    a.reserve(owner=1, n_tokens=16)
+    assert a.release(1) == 2
+    with pytest.raises(KeyError, match="double release"):
+        a.release(1)
+    assert a.free_blocks == 4          # the failed release took nothing
+    assert a.release(1, missing_ok=True) == 0
+    assert a.free_blocks == 4
+
+
+def test_allocator_cancel_then_slice_end_path():
+    """The serving cancel path: cancellation itself must not release the
+    slice envelope (slice end releases exactly once); a buggy duplicate
+    release raises, and afterwards every page is still handed out exactly
+    once."""
+    a = PageAllocator(n_pages=4, page_tokens=8)
+    a.reserve(owner=7, n_tokens=16)    # slice start: envelope reserved
+    assert a.release(7) == 2           # slice end (cancelled or not)
+    with pytest.raises(KeyError):      # cancel must NOT also release
+        a.release(7)
+    pages = a.reserve(owner=8, n_tokens=32)
+    assert sorted(pages) == [1, 2, 3, 4]  # free list intact, no duplicates
