@@ -71,7 +71,12 @@ def bench_fig12_throughput() -> List[Dict]:
                                  p95_response_s=round(m.p95_response, 2),
                                  p99_response_s=round(m.p99_response, 2),
                                  ttft_mean_s=round(m.ttft_mean, 2),
-                                 ttft_p95_s=round(m.ttft_p95, 2)))
+                                 ttft_p95_s=round(m.ttft_p95, 2),
+                                 # online-serving columns: offline trace
+                                 # replay sheds nothing (0 / 1.0); the
+                                 # admission sweep lives in bench_serving
+                                 n_rejected=m.n_rejected,
+                                 slo_attainment=round(m.slo_attainment, 4)))
     emit(rows, "fig12_throughput_response")
     return rows
 

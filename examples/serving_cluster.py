@@ -4,9 +4,15 @@ now driven through the online ``repro.serving`` API: every strategy runs a
 ``SliceServer`` (submit → slice scheduling → drain) over the shared
 ``SchedulerCore`` with the sim backend.
 
+A second section then exercises the *concurrent* front end
+(``AsyncSliceServer``): a gather of asyncio clients with mixed per-request
+SLOs, one of which cancels mid-stream — submit / per-slice streaming /
+SLO-aware admission / cancellation end to end on one scheduler.
+
   PYTHONPATH=src python examples/serving_cluster.py [--rate 20] [--duration 300]
 """
 import argparse
+import asyncio
 import copy
 import sys
 
@@ -14,7 +20,49 @@ sys.path.insert(0, "src")
 
 from repro.core.memory import RuleBasedMemoryEstimator
 from repro.core.schedulers import ALL_STRATEGIES
-from repro.serving import ServingConfig, default_sim_environment
+from repro.serving import (AdmissionRejected, ServingConfig,
+                           default_sim_environment)
+
+
+async def concurrent_clients_demo() -> None:
+    """N asyncio clients over one AsyncSliceServer, mixed SLOs, one
+    mid-stream cancel."""
+    server = ServingConfig(strategy="scls", workers=2, slice_len=64,
+                           gamma=1.0).build_sim().aio
+    # mixed traffic: generous SLOs, one unmeetable (shed at submit),
+    # one best-effort (no SLO), one cancelled after its first slice
+    jobs = [dict(input_len=96, gen_len=200, slo_ms=60_000),
+            dict(input_len=64, gen_len=150, slo_ms=60_000),
+            dict(input_len=48, gen_len=120, slo_ms=None),
+            dict(input_len=900, gen_len=1000, slo_ms=200),   # doomed
+            dict(input_len=80, gen_len=400, slo_ms=90_000)]  # cancels
+
+    async def client(i: int, job: dict) -> str:
+        try:
+            h = server.submit(input_len=job["input_len"],
+                              gen_len=job["gen_len"], slo_ms=job["slo_ms"])
+        except AdmissionRejected as e:
+            return f"client {i}: REJECTED at submit ({e.decision.reason})"
+        n_stream = 0
+        async for _tok in h.tokens():
+            n_stream += 1
+            if i == 4 and n_stream >= 64:  # one slice in: hang up
+                h.cancel()
+                break
+        await h.result()
+        state = "cancelled" if h.cancelled else "done"
+        return (f"client {i}: {state} after {h.request.generated} tokens "
+                f"({h.request.n_schedules} slices, streamed {n_stream})")
+
+    results = await asyncio.gather(*(client(i, j) for i, j in enumerate(jobs)))
+    for line in results:
+        print(f"  {line}")
+    m = await server.close()
+    stats = server.admission_stats
+    print(f"  -> {m.n_completed} completed, {stats['n_rejected']} rejected, "
+          f"SLO attainment {m.slo_attainment:.2f}")
+    assert m.n_completed == 3 and stats["n_rejected"] == 1
+    assert any("cancelled" in line for line in results)
 
 
 def main():
@@ -51,6 +99,10 @@ def main():
               f"{m.p95_response:8.1f} {m.p99_response:8.1f} "
               f"{m.ttft_mean:8.1f} {m.ct_std:9.1f} {m.avg_batch_size:6.1f} "
               f"{m.avg_invalid_tokens:8.1f} {m.avg_pad_tokens:7.1f}")
+
+    print("\nconcurrent asyncio clients (AsyncSliceServer, mixed SLOs, "
+          "one mid-stream cancel):")
+    asyncio.run(concurrent_clients_demo())
 
 
 if __name__ == "__main__":

@@ -29,6 +29,12 @@ class RunMetrics:
     avg_schedules: float        # Fig. 14a (slice count)
     early_return_ratio: float   # Fig. 14b
     makespan: float
+    # --- online-serving columns (SLO-aware admission, PR 4) ---
+    # defaulted so offline runs and pre-existing benchmark CSV schemas
+    # stay valid: no admission layer -> 0 rejected, and with no deadlines
+    # submitted every completion trivially attains its (absent) SLO
+    n_rejected: int = 0         # shed by admission before any prefill
+    slo_attainment: float = 1.0  # completed-with-deadline meeting it
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -37,8 +43,17 @@ class RunMetrics:
 def compute_metrics(name: str, requests: Sequence[Request], duration: float,
                     worker_completion_times: Sequence[float],
                     batch_sizes: Sequence[int],
-                    early_returns: int, total_batches: int) -> RunMetrics:
+                    early_returns: int, total_batches: int,
+                    n_rejected: int = 0) -> RunMetrics:
     done = [r for r in requests if r.done and r.finish_time is not None]
+    # SLO attainment: of the completed requests that carried a deadline
+    # (online submissions with slo_ms), the fraction that met it.  Shed
+    # work is reported separately as n_rejected; deadline-less (offline /
+    # best-effort) runs default to 1.0 so the column is always finite.
+    with_slo = [r for r in done if r.deadline is not None]
+    slo_attainment = (float(np.mean([r.finish_time <= r.deadline
+                                     for r in with_slo]))
+                      if with_slo else 1.0)
     # requests can be empty (an online server drained before any submit)
     per_req = (np.array([[r.invalid_tokens, r.pad_tokens, r.n_schedules]
                          for r in requests], float)
@@ -69,4 +84,6 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
         avg_schedules=float(per_req[:, 2].mean()),
         early_return_ratio=early_returns / max(total_batches, 1),
         makespan=float(ct.max()),
+        n_rejected=int(n_rejected),
+        slo_attainment=slo_attainment,
     )

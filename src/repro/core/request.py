@@ -27,6 +27,11 @@ class Request:
     gen_len: Optional[int]
     max_gen: int = 1024
     prompt: Optional[np.ndarray] = None  # actual tokens (real-execution mode)
+    #: absolute completion deadline in core time (``arrival + slo``), set
+    #: by the online serving API's SLO-aware admission; None = best-effort.
+    #: Schedulers never read it — it exists for admission decisions (made
+    #: before submission) and the SLO-attainment metric.
+    deadline: Optional[float] = None
 
     # --- scheduling state ---
     generated: int = 0

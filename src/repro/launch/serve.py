@@ -12,6 +12,12 @@
   PYTHONPATH=src python -m repro.launch.serve --strategy scls-pred \
       --predictor histogram --coverage 0.7
 
+  # OpenAI-compatible HTTP endpoint with SLO-aware admission: concurrent
+  # clients POST /v1/completions (stream=true -> SSE per slice), requests
+  # predicted to miss --slo-ms get 429 + Retry-After before any prefill
+  PYTHONPATH=src python -m repro.launch.serve --backend sim \
+      --http-port 8000 --slo-ms 30000 --duration 0   # 0 = serve forever
+
 The real backend profiles the engine, fits the Eq. 3/4 estimator, then
 replays a Poisson trace through ``SliceServer`` — plus one *interactive*
 request submitted mid-run, streamed per slice, to exercise the online
@@ -66,6 +72,37 @@ def build_server(cfg: ServingConfig) -> tuple[SliceServer, int]:
     return cfg.build_real(engines, est, mem), arch.vocab_size
 
 
+def serve_http(cfg: ServingConfig, server: SliceServer, vocab: int) -> None:
+    """--http-port mode: expose the server over the OpenAI-compatible
+    HTTP front end until --duration elapses (<= 0 = forever)."""
+    import time
+
+    from repro.serving import HTTPFrontend
+
+    model_name = cfg.arch if cfg.backend == "real" else "scls-sim"
+    front = HTTPFrontend(server.aio, port=cfg.http_port,
+                         model_name=model_name, vocab_size=vocab)
+    front.start()
+    print(f"[serve] http listening on {front.url} "
+          f"(model={model_name}, slo_ms={cfg.slo_ms}, "
+          f"time_scale={cfg.time_scale})", flush=True)
+    try:
+        if cfg.duration > 0:
+            time.sleep(cfg.duration)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    front.shutdown(drain=True)
+    m = server.metrics()
+    stats = server.admission_stats
+    print(f"[serve] http served {m.n_completed} completions "
+          f"({stats['n_submitted']} submitted, {stats['n_rejected']} "
+          f"rejected, {stats['n_degraded']} degraded); "
+          f"SLO attainment {m.slo_attainment:.2f}")
+
+
 def main() -> None:
     cfg = ServingConfig.from_cli(
         description=__doc__.splitlines()[0],
@@ -76,6 +113,10 @@ def main() -> None:
           + (f" arch={cfg.arch} (reduced={cfg.reduced})"
              if cfg.backend == "real" else ""))
     server, vocab = build_server(cfg)
+
+    if cfg.http_port is not None:
+        serve_http(cfg, server, vocab)
+        return
 
     spec = WorkloadSpec("demo", input_mu=3.0, input_sigma=0.7, gen_mu=2.3,
                         gen_sigma=0.7, max_input=64, max_gen=cfg.max_gen)

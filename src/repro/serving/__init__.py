@@ -4,26 +4,45 @@ One :class:`SchedulerCore` implements the scheduling loop (arrival intake
 → predict → DP batch → max-min offload → slice dispatch → re-enqueue)
 for *every* runtime; a :class:`Backend` supplies the physics
 (:class:`SimBackend`: calibrated latency models in virtual time;
-:class:`RealBackend`: real JAX engines, measured wall time).  On top,
-:class:`SliceServer` exposes the online API a real deployment needs —
-``submit`` / per-slice token streaming / ``cancel`` / ``drain`` — and
-:class:`ServingConfig` is the one validated configuration object for all
-of it.
+:class:`RealBackend`: real JAX engines, measured wall time).  On top:
+
+* :class:`AsyncSliceServer` (``repro.serving.aio``) — the concurrent
+  front end: a background pacer task steps the core with wall-clock
+  pacing while N clients ``await handle.result()`` / ``async for tok in
+  handle.tokens()``;
+* :class:`SliceServer` — the synchronous caller-driven adapter over it
+  (``submit`` / per-slice token streaming / ``cancel`` / ``drain``);
+* :class:`AdmissionController` (``repro.serving.admission``) — SLO-aware
+  admission: predicted queue delay + Eq. 1–4 completion estimates reject
+  doomed requests (:class:`AdmissionRejected`) before any prefill;
+* :class:`HTTPFrontend` (``repro.serving.http``) — a stdlib-only
+  OpenAI-compatible endpoint (``POST /v1/completions`` with per-slice SSE
+  streaming, ``GET /healthz``, 429 + ``Retry-After`` from admission);
+* :class:`ServingConfig` — the one validated configuration object for all
+  of it.
 
 The legacy offline entry points (``repro.cluster.simulator.
 ClusterSimulator``, ``repro.cluster.realtime.RealCluster``) remain as
 thin shims over this package.
 """
+from repro.serving.admission import (NO_ADMISSION, AdmissionController,
+                                     AdmissionDecision, AdmissionRejected,
+                                     predicted_queue_delay,
+                                     predicted_service_time)
+from repro.serving.aio import AsyncRequestHandle, AsyncSliceServer
 from repro.serving.backends import (Backend, BatchExecution, RealBackend,
                                     SimBackend)
 from repro.serving.config import (SERVABLE_REAL, ServingConfig,
                                   default_sim_environment, fitted_estimator)
 from repro.serving.core import SchedulerCore, WorkerState
+from repro.serving.http import HTTPFrontend
 from repro.serving.server import RequestHandle, SliceServer
 
 __all__ = [
-    "Backend", "BatchExecution", "RealBackend", "RequestHandle",
+    "AdmissionController", "AdmissionDecision", "AdmissionRejected",
+    "AsyncRequestHandle", "AsyncSliceServer", "Backend", "BatchExecution",
+    "HTTPFrontend", "NO_ADMISSION", "RealBackend", "RequestHandle",
     "SERVABLE_REAL", "SchedulerCore", "ServingConfig", "SimBackend",
     "SliceServer", "WorkerState", "default_sim_environment",
-    "fitted_estimator",
+    "fitted_estimator", "predicted_queue_delay", "predicted_service_time",
 ]

@@ -220,6 +220,13 @@ class RealBackend:
             for r in batch.requests:  # slice end: envelope freed
                 alloc.release(r.rid)
 
+    def free_blocks(self) -> List[int]:
+        """Per-worker free KV-block counts (paged layout; ``[]`` when
+        dense) — surfaced by the HTTP ``/healthz`` snapshot."""
+        if self.allocators is None:
+            return []
+        return [a.free_blocks for a in self.allocators]
+
     def prefill_time(self, req: Request) -> float:
         raise NotImplementedError(
             "RealBackend does not run continuous modes; use "

@@ -74,6 +74,10 @@ class ServingConfig:
     # --- workload knobs consumed by launchers (trace replay) ---
     rate: float = 2.0
     duration: float = 15.0
+    # --- online front end (repro.serving.{aio,admission,http}) ---
+    http_port: Optional[int] = None      # None = no HTTP endpoint
+    slo_ms: Optional[float] = None       # default per-request SLO (admission)
+    time_scale: Optional[float] = None   # sim pacing: virtual s per wall s
 
     def __post_init__(self) -> None:
         self.validate()
@@ -121,6 +125,20 @@ class ServingConfig:
                              f"got {self.page_tokens}")
         if self.bucket_phi <= 1.0:
             raise ValueError(f"bucket_phi must be > 1, got {self.bucket_phi}")
+        if self.http_port is not None and not 0 <= self.http_port <= 65535:
+            raise ValueError(f"http_port must be in [0, 65535] (0 = "
+                             f"ephemeral), got {self.http_port}")
+        if self.slo_ms is not None and self.slo_ms <= 0:
+            raise ValueError(f"slo_ms must be positive, got {self.slo_ms}")
+        if self.time_scale is not None:
+            if self.time_scale <= 0:
+                raise ValueError(f"time_scale must be positive, "
+                                 f"got {self.time_scale}")
+            if self.backend != "sim":
+                raise ValueError(
+                    "time_scale paces virtual time, which only the sim "
+                    "backend has; the real backend's engines consume wall "
+                    "time already")
 
     # ------------------------------------------------------------------
     @classmethod
@@ -165,6 +183,17 @@ class ServingConfig:
         ap.add_argument("--reduced", action="store_true", default=cls.reduced)
         ap.add_argument("--rate", type=float, default=cls.rate)
         ap.add_argument("--duration", type=float, default=cls.duration)
+        ap.add_argument("--http-port", type=int, default=cls.http_port,
+                        help="serve an OpenAI-compatible HTTP endpoint on "
+                             "this port (0 = ephemeral) instead of the "
+                             "trace-replay demo")
+        ap.add_argument("--slo-ms", type=float, default=cls.slo_ms,
+                        help="default per-request SLO for admission control "
+                             "(requests predicted to miss it get 429)")
+        ap.add_argument("--time-scale", type=float, default=cls.time_scale,
+                        help="sim-backend pacing: virtual seconds served "
+                             "per wall second (1 = real time; default: "
+                             "as fast as possible)")
 
     @classmethod
     def from_cli(cls, argv: Optional[Sequence[str]] = None,
@@ -252,7 +281,8 @@ class ServingConfig:
                              seed=self.seed)
         core = SchedulerCore(self.strategy_config(), backend, self.workers,
                              sched_est, mem, ils_span=self.ils_span)
-        return SliceServer(core)
+        return SliceServer(core, default_slo_ms=self.slo_ms,
+                           time_scale=self.time_scale)
 
     def build_real(self, engines: Sequence[Any],
                    sched_est: ServingTimeEstimator,
@@ -262,7 +292,7 @@ class ServingConfig:
                               sched_bucket=sched_est.bucket)
         core = SchedulerCore(self.strategy_config(), backend, len(engines),
                              sched_est, mem, ils_span=self.ils_span)
-        return SliceServer(core)
+        return SliceServer(core, default_slo_ms=self.slo_ms)
 
     def build(self, **kwargs: Any) -> SliceServer:
         """Dispatch on ``backend`` (build_real needs engines/sched_est/mem)."""

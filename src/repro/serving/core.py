@@ -124,6 +124,16 @@ class SchedulerCore:
         self.token_log: Dict[int, List[int]] = {}  # per-slice token stream
         self._finalized: Set[int] = set()
         self._cancelled: Set[int] = set()
+        # progress observers: fn(kind, request) with kind "slice" (the
+        # request's token stream advanced at a slice/iteration boundary)
+        # or "final" (terminal).  Purely additive — the async front end
+        # (repro.serving.aio) hangs its wakeups here; offline runs have
+        # no observers and pay nothing.
+        self._observers: List = []
+        #: requests shed by the admission layer before ever reaching the
+        #: scheduler (repro.serving.admission); counted here so metrics()
+        #: reports them alongside the work that did run
+        self.n_rejected = 0
         # --- accounting (paper figure columns) ---
         self.batch_sizes: List[int] = []
         self.early_returns = 0
@@ -230,6 +240,15 @@ class SchedulerCore:
     def is_finalized(self, rid: int) -> bool:
         return rid in self._finalized
 
+    def add_observer(self, fn) -> None:
+        """Register a progress observer ``fn(kind, request)`` — see
+        ``_observers`` in ``__init__``."""
+        self._observers.append(fn)
+
+    def _notify(self, kind: str, r: Request) -> None:
+        for fn in self._observers:
+            fn(kind, r)
+
     def _finalize(self, r: Request, completed: bool) -> None:
         """Terminal bookkeeping, exactly once per request."""
         r.done = completed
@@ -246,6 +265,7 @@ class SchedulerCore:
             # 1-token completion that biases caps toward zero
             self.pred.on_complete(r)
         self._finalized.add(r.rid)
+        self._notify("final", r)
 
     # ------------------------------------------------------------------
     # offline entry point (legacy ClusterSimulator/RealCluster semantics)
@@ -266,7 +286,8 @@ class SchedulerCore:
             duration = max(wct) if wct else 0.0
         return compute_metrics(self.s.name, list(self.requests), duration,
                                wct, self.batch_sizes, self.early_returns,
-                               self.total_batches)
+                               self.total_batches,
+                               n_rejected=self.n_rejected)
 
     # ------------------------------------------------------------------
     # event handlers
@@ -420,6 +441,7 @@ class SchedulerCore:
                 self._finalize(r, completed=True)
             else:
                 unfinished.append(r)
+                self._notify("slice", r)
         self.offloader.on_batch_complete(wid, b.est_time)
         if unfinished:
             if self.s.mode in ("central", "pred"):
@@ -538,8 +560,10 @@ class SchedulerCore:
                 expired.append(r)
                 self.offloader.on_batch_complete(
                     w.wid, self._lease_est.pop(r.rid, 0.0))
+                self._notify("slice", r)
             else:
                 still.append([r, c + span, lease_left, blocks])
+                self._notify("slice", r)
         w.running = still
         if expired:
             self.pool.extend(expired)

@@ -1,9 +1,9 @@
-"""Request-level online serving API over one :class:`SchedulerCore`.
+"""Synchronous request-level serving API over one :class:`SchedulerCore`.
 
-The offline runtimes take a fully pre-materialized trace and a duration;
-``SliceServer`` is what a real SCLS deployment needs instead: requests
-are *submitted* while the system runs, their tokens are observable per
-slice as they are produced, and they can be cancelled mid-flight.
+``SliceServer`` is the caller-driven flavor of the online API: every
+``tokens()`` / ``result()`` / ``drain()`` call advances the shared event
+queue, which makes it deterministic and perfect for tests, offline
+replays, and single-client scripts::
 
     server = ServingConfig(strategy="scls", workers=4).build_sim()
     h = server.submit(input_len=64, gen_len=200)
@@ -13,63 +13,36 @@ slice as they are produced, and they can be cancelled mid-flight.
     h2.cancel()                     # frees its page envelope mid-flight
     server.drain()                  # completes all in-flight work
 
-Time is virtual on both backends (the real backend measures wall time per
-batch but keeps per-worker virtual clocks), so the server is a
-*synchronous* reactor: every ``tokens()`` / ``result()`` / ``drain()``
-call advances the shared event queue.  Online arrivals enter the exact
-same batching/offloading algorithms (Alg. 1–2) the offline path uses —
-there is no second scheduler.
+Since PR 4 it is a thin adapter over
+:class:`~repro.serving.aio.AsyncSliceServer` (exposed as ``.aio``): the
+submission path — validation, rid allocation, SLO-aware admission
+(``slo_ms=`` raises :class:`~repro.serving.admission.AdmissionRejected`
+before any prefill/page work), handle bookkeeping — lives exactly once in
+the async server, and this class only adds the synchronous drive loop.
+For N concurrent clients, wall-clock pacing, or the OpenAI-compatible
+HTTP endpoint, use ``server.aio`` (``repro.serving.aio``) directly.
+
+Online arrivals enter the exact same batching/offloading algorithms
+(Alg. 1–2) the offline path uses — there is no second scheduler.
 """
 from __future__ import annotations
 
-import itertools
 from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
 
 from repro.cluster.metrics import RunMetrics
 from repro.core.request import Request
+from repro.serving.admission import AdmissionController
+from repro.serving.aio import (_SERVER_RID_BASE, AsyncSliceServer,
+                               RequestView)
 from repro.serving.core import SchedulerCore
 
+__all__ = ["RequestHandle", "SliceServer", "_SERVER_RID_BASE"]
 
-class RequestHandle:
-    """Live view of one submitted request."""
 
-    def __init__(self, server: "SliceServer", request: Request):
-        self._server = server
-        self.request = request
-
-    @property
-    def rid(self) -> int:
-        return self.request.rid
-
-    @property
-    def finished(self) -> bool:
-        """Terminal (completed or cancelled)."""
-        return self._server.core.is_finalized(self.rid)
-
-    @property
-    def done(self) -> bool:
-        """Completed successfully."""
-        return self.finished and self.request.done
-
-    @property
-    def cancelled(self) -> bool:
-        return self.request.cancelled
-
-    def _tokens_so_far(self) -> Sequence[int]:
-        toks = self._server.core.token_log.get(self.rid)
-        if toks is not None:  # real backend, mid-flight
-            return toks
-        if self.finished and self.request.output_tokens is not None:
-            return self.request.output_tokens  # real backend, terminal
-        # sim backend: token ids are by definition the generation indices
-        return range(self.request.generated)
-
-    @property
-    def output_tokens(self) -> List[int]:
-        """Tokens produced so far (all of them once terminal)."""
-        return list(self._tokens_so_far())
+class RequestHandle(RequestView):
+    """Live view of one submitted request (synchronous drive methods)."""
 
     def tokens(self) -> Iterator[int]:
         """Stream this request's tokens as slices complete.
@@ -107,19 +80,25 @@ class RequestHandle:
         return self._server.cancel(self.rid)
 
 
-#: server-assigned request ids live in their own namespace so interactive
-#: ``submit`` calls never collide with trace rids (0..n) fed to ``replay``
-_SERVER_RID_BASE = 1 << 32
-
-
 class SliceServer:
-    """Submit / stream / cancel front end over one shared SchedulerCore."""
+    """Submit / stream / cancel front end over one shared SchedulerCore.
 
-    def __init__(self, core: SchedulerCore):
+    Thin synchronous adapter over :class:`AsyncSliceServer` (``.aio``):
+    submission/admission/bookkeeping are delegated; only the drive loop
+    (``step`` / blocking ``drain``) is this class's own.
+    """
+
+    def __init__(self, core: SchedulerCore,
+                 admission: Optional[AdmissionController] = None,
+                 default_slo_ms: Optional[float] = None,
+                 time_scale: Optional[float] = None):
         self.core = core
-        self._next_rid = itertools.count(_SERVER_RID_BASE)
+        #: the concurrent front end this server adapts; share it with
+        #: asyncio clients or the HTTP endpoint for the same scheduler
+        self.aio = AsyncSliceServer(core, admission=admission,
+                                    default_slo_ms=default_slo_ms,
+                                    time_scale=time_scale)
         self._handles: dict[int, RequestHandle] = {}
-        self._closed = False
 
     # ------------------------------------------------------------------
     @property
@@ -130,12 +109,23 @@ class SliceServer:
     def now(self) -> float:
         return self.core.now
 
+    @property
+    def n_rejected(self) -> int:
+        return self.core.n_rejected
+
+    @property
+    def admission_stats(self) -> dict:
+        return self.aio.admission_stats
+
     # ------------------------------------------------------------------
     def submit(self, prompt: Optional[np.ndarray] = None, *,
                input_len: Optional[int] = None,
                gen_len: Optional[int] = None,
                max_gen: int = 1024,
-               arrival: Optional[float] = None) -> RequestHandle:
+               arrival: Optional[float] = None,
+               slo_ms: Optional[float] = None,
+               deadline: Optional[float] = None,
+               allow_degrade: bool = False) -> RequestHandle:
         """Submit one request; returns a handle immediately.
 
         ``prompt`` (token ids) is required on the real backend and
@@ -144,42 +134,31 @@ class SliceServer:
         controlled-replay convention; pass None to decode until the
         model's own EOS (real backend) or ``max_gen`` (sim backend).
         ``arrival`` defaults to the server's current virtual time.
+        ``slo_ms``/``deadline`` enable SLO-aware admission: a request
+        whose predicted completion violates the deadline raises
+        :class:`~repro.serving.admission.AdmissionRejected` before any
+        prefill or page reservation (see :meth:`AsyncSliceServer.submit`).
         """
-        if self._closed:
-            raise RuntimeError("server is closed")
-        if prompt is None and input_len is None:
-            raise ValueError("need a prompt or an input_len")
-        if prompt is not None:
-            prompt = np.asarray(prompt, np.int32)
-            if input_len is None:
-                input_len = int(prompt.shape[0])
-        rid = next(self._next_rid)
-        while rid in self.core._by_rid:  # replay() may have taken ids
-            rid = next(self._next_rid)
-        req = Request(rid=rid, arrival=self.core.now, input_len=int(input_len),
-                      gen_len=None if gen_len is None else int(gen_len),
-                      max_gen=int(max_gen), prompt=prompt)
-        self.core.submit(req, arrival=arrival)
-        h = RequestHandle(self, req)
-        self._handles[rid] = h
+        ah = self.aio.submit(prompt, input_len=input_len, gen_len=gen_len,
+                             max_gen=max_gen, arrival=arrival, slo_ms=slo_ms,
+                             deadline=deadline, allow_degrade=allow_degrade)
+        h = RequestHandle(self, ah.request)
+        self._handles[h.rid] = h
         return h
 
     def replay(self, requests: Sequence[Request]) -> List[RequestHandle]:
         """Submit pre-built trace requests (mutated in place, like the
         legacy ``run()`` path — deep-copy the trace to keep it)."""
-        if self._closed:
-            raise RuntimeError("server is closed")
         handles = []
-        for r in requests:
-            self.core.submit(r)
-            h = RequestHandle(self, r)
-            self._handles[r.rid] = h
+        for ah in self.aio.replay(requests):
+            h = RequestHandle(self, ah.request)
+            self._handles[h.rid] = h
             handles.append(h)
         return handles
 
     # ------------------------------------------------------------------
     def cancel(self, rid: int) -> bool:
-        return self.core.cancel(rid)
+        return self.aio.cancel(rid)
 
     def step(self) -> bool:
         """Advance the shared event queue by one event."""
@@ -196,7 +175,7 @@ class SliceServer:
     def close(self, duration: Optional[float] = None) -> RunMetrics:
         """Drain and refuse further submissions."""
         m = self.drain(duration)
-        self._closed = True
+        self.aio._closed = True
         return m
 
     # ------------------------------------------------------------------

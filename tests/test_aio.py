@@ -1,0 +1,470 @@
+"""repro.serving.aio + repro.serving.admission: the concurrent async
+front end (N clients over one SchedulerCore), SLO-aware admission, and
+shutdown/cancellation semantics under concurrency — on both backends."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.memory import (AnalyticMemoryEstimator, LLAMA2_13B_DELTA,
+                               PagedMemoryEstimator)
+from repro.serving import (AdmissionController, AdmissionRejected,
+                           NO_ADMISSION, ServingConfig,
+                           default_sim_environment, predicted_queue_delay)
+
+
+@pytest.fixture(scope="module")
+def sim_env():
+    return default_sim_environment("hf")  # analytic memory model
+
+
+def _sim_aio(sim_env, **cfg_kw):
+    true_lat, est, mem = sim_env
+    kw = dict(strategy="scls", workers=2, slice_len=64, gamma=1.0)
+    kw.update(cfg_kw)
+    return ServingConfig(**kw).build_sim(true_lat, est, mem).aio
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: concurrent clients over one core
+# ---------------------------------------------------------------------------
+def test_two_concurrent_clients_interleave_in_one_slice_batch(sim_env):
+    """Two clients submitted concurrently must be batched TOGETHER by the
+    central tick — asserted on the dispatch log, the same fingerprint the
+    golden-equivalence test pins."""
+    server = _sim_aio(sim_env)
+
+    async def client(i):
+        h = server.submit(input_len=64, gen_len=100, arrival=0.0)
+        toks = [t async for t in h.tokens()]
+        assert toks == list(range(100))
+        r = await h.result()
+        assert r.done
+        return h.rid
+
+    async def main():
+        rids = await asyncio.gather(client(0), client(1))
+        m = await server.close()
+        return rids, m
+
+    rids, m = asyncio.run(main())
+    assert m.n_completed == 2
+    shared = [e for e in server.core.batch_log
+              if e[0] == "static" and set(rids) <= set(e[2])]
+    assert shared, (f"clients {rids} never shared a slice batch: "
+                    f"{server.core.batch_log}")
+
+
+def test_async_slices_stream_one_chunk_per_slice(sim_env):
+    """slices() must reproduce the true slice chunking even when consumed
+    after the fact (slice boundaries are recorded as they happen) — the
+    guarantee the SSE endpoint's chunk-per-slice contract rests on."""
+    server = _sim_aio(sim_env)
+
+    async def main():
+        h = server.submit(input_len=64, gen_len=200, arrival=0.0)
+        await h.result()  # everything completes before we consume
+        chunks = [c async for c in h.slices()]
+        return h, chunks
+
+    h, chunks = asyncio.run(main())
+    assert h.request.n_schedules == len(chunks)
+    assert [t for c in chunks for t in c] == list(range(200))
+    assert all(len(c) <= 64 for c in chunks)
+
+
+def test_many_clients_mixed_lifecycles(sim_env):
+    """Submits, streams, cancels, and awaits interleaved across many
+    clients complete without cross-talk."""
+    server = _sim_aio(sim_env, workers=4)
+
+    async def streamer(i):
+        h = server.submit(input_len=32 + i, gen_len=120)
+        return [t async for t in h.tokens()], h
+
+    async def canceller(i):
+        h = server.submit(input_len=48 + i, gen_len=300)
+        async for t in h.tokens():
+            if t >= 64:  # after its first slice completes
+                h.cancel()
+                break
+        await h.result()
+        return h
+
+    async def main():
+        res = await asyncio.gather(*(streamer(i) for i in range(6)),
+                                   *(canceller(i) for i in range(2)))
+        m = await server.close()
+        return res, m
+
+    res, m = asyncio.run(main())
+    for toks, h in res[:6]:
+        assert h.done and toks == list(range(120))
+    for h in res[6:]:
+        assert h.cancelled and not h.done
+        assert 0 < h.request.generated < 300
+    assert m.n_completed == 6
+
+
+# ---------------------------------------------------------------------------
+# shutdown semantics under concurrency
+# ---------------------------------------------------------------------------
+def test_drain_with_inflight_streams_completes_them(sim_env):
+    server = _sim_aio(sim_env)
+
+    async def consumer(h):
+        return [t async for t in h.tokens()]
+
+    async def main():
+        handles = [server.submit(input_len=64, gen_len=150,
+                                 arrival=0.5 * i) for i in range(3)]
+        streams = [asyncio.ensure_future(consumer(h)) for h in handles]
+        m = await server.drain()          # concurrent with the streams
+        token_lists = await asyncio.gather(*streams)
+        return m, handles, token_lists
+
+    m, handles, token_lists = asyncio.run(main())
+    assert m.n_completed == 3
+    assert all(h.done for h in handles)
+    assert all(toks == list(range(150)) for toks in token_lists)
+
+
+def test_close_refuses_new_submissions_and_stops_pacer(sim_env):
+    server = _sim_aio(sim_env)
+
+    async def main():
+        h = server.submit(input_len=16, gen_len=30)
+        m = await server.close()
+        assert h.done and m.n_completed == 1
+        with pytest.raises(RuntimeError, match="closed"):
+            server.submit(input_len=8, gen_len=4)
+        assert server._task is None  # pacer gone
+
+    asyncio.run(main())
+
+
+def test_pacer_failure_propagates_to_waiters(sim_env):
+    """A backend/step failure must not strand clients on events that
+    never fire: every waiter re-raises the pacer's exception."""
+    server = _sim_aio(sim_env)
+
+    class Boom(RuntimeError):
+        pass
+
+    orig = server.core.backend.run_batch
+
+    def exploding(*a, **kw):
+        raise Boom("engine fell over")
+
+    server.core.backend.run_batch = exploding
+    try:
+        async def main():
+            h = server.submit(input_len=64, gen_len=100)
+            with pytest.raises(Boom):
+                await h.result()
+            with pytest.raises(Boom):
+                await server.drain()
+
+        asyncio.run(main())
+    finally:
+        server.core.backend.run_batch = orig
+
+
+def test_pacer_restarts_clean_after_failure(sim_env):
+    """One failed step must not poison the server forever: once the
+    fault is gone, a fresh submit restarts the pacer and new requests
+    serve normally."""
+    server = _sim_aio(sim_env)
+    orig = server.core.backend.run_batch
+
+    def exploding(*a, **kw):
+        raise RuntimeError("transient engine fault")
+
+    async def main():
+        server.core.backend.run_batch = exploding
+        h = server.submit(input_len=64, gen_len=50)
+        with pytest.raises(RuntimeError, match="transient"):
+            await h.result()
+        server.core.backend.run_batch = orig
+        h2 = server.submit(input_len=32, gen_len=40)
+        r = await h2.result()
+        assert r.done and r.generated == 40
+        assert server._pacer_exc is None
+
+    asyncio.run(main())
+
+
+def test_slow_consumer_receives_final_slice_tokens(sim_env):
+    """A consumer that awaits between yields (any real socket writer)
+    must still receive the tokens of the slice that finalized the
+    request — the snapshot it iterates goes stale while it sleeps."""
+    server = _sim_aio(sim_env)
+
+    async def main():
+        h = server.submit(input_len=64, gen_len=200)
+        toks = []
+        async for t in h.tokens():
+            toks.append(t)
+            await asyncio.sleep(0)  # yield to the pacer between tokens
+        return toks
+
+    toks = asyncio.run(main())
+    assert toks == list(range(200))
+
+
+def test_finished_handles_are_released(sim_env):
+    """Serve-forever deployments must not leak one handle per request:
+    terminal requests leave the server's registry."""
+    server = _sim_aio(sim_env)
+
+    async def main():
+        hs = [server.submit(input_len=32, gen_len=20) for _ in range(5)]
+        await asyncio.gather(*(h.result() for h in hs))
+        return hs
+
+    hs = asyncio.run(main())
+    assert server._handles == {}
+    # ...but completed handles keep working standalone
+    assert all(h.done and h.output_tokens == list(range(20)) for h in hs)
+
+
+def test_cancel_racing_slice_completion_sim(sim_env):
+    """Cancel issued while the slice-completion event is already queued:
+    the slice's tokens land, the request finalizes exactly once as
+    cancelled, and nothing leaks (offloader load decays to zero)."""
+    server = _sim_aio(sim_env)
+    h = server.submit(input_len=64, gen_len=500)
+    core = server.core
+
+    def completion_queued(rid):
+        return any(kind == "batch_done"
+                   and any(r.rid == rid for r in payload[1].requests)
+                   for _, _, kind, payload in core._events)
+
+    while not completion_queued(h.rid):   # sync drive: no loop running
+        assert core.step()
+    assert h.cancel()
+    core.run_until_idle()
+    assert h.cancelled and not h.done and h.finished
+    assert 0 < h.request.generated < 500  # the in-flight slice landed
+    assert core.is_finalized(h.rid)
+    assert max(core.offloader.loads.values()) == pytest.approx(0.0, abs=1e-9)
+    m = core.metrics()
+    assert m.n_completed == 0 and m.n_requests == 1
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission (sim)
+# ---------------------------------------------------------------------------
+def test_rejected_request_leaves_no_trace_sim(sim_env):
+    """A rejected request must never reach the scheduler: no Request
+    registered, no dispatch, no paged block accounting — only the
+    n_rejected counter moves."""
+    true_lat, est, _ = sim_env
+    mem = PagedMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                               m_available=5e9, zeta=0.9, page_tokens=16)
+    server = ServingConfig(strategy="scls", kv_layout="paged", workers=2,
+                           slice_len=64, gamma=1.0).build_sim(
+        true_lat, est, mem).aio
+    with pytest.raises(AdmissionRejected) as ei:
+        server.submit(input_len=512, gen_len=800, slo_ms=1.0)
+    d = ei.value.decision
+    assert not d.accept and d.retry_after > 0
+    assert "deadline" in d.reason
+    assert server.core.requests == [] and server.core.batch_log == []
+    assert server.core.pool == [] and not server.core._by_rid
+    assert server.n_rejected == 1 and server.n_submitted == 0
+    m = server.metrics()
+    assert m.n_rejected == 1 and m.n_requests == 0
+
+    # a best-effort request (no SLO) on the same server is admitted
+    h = server.submit(input_len=512, gen_len=10)
+    assert h.request.deadline is None
+
+
+def test_admission_degrade_clamps_generation_budget(sim_env):
+    """allow_degrade=True admits with the longest budget that still meets
+    the deadline instead of rejecting."""
+    server = _sim_aio(sim_env)
+    with pytest.raises(AdmissionRejected):
+        server.submit(input_len=64, gen_len=600, slo_ms=8_000)
+    h = server.submit(input_len=64, gen_len=600, slo_ms=8_000,
+                      allow_degrade=True)
+    assert 1 <= h.request.max_gen < 600
+    assert h.request.gen_len == h.request.max_gen
+    assert server.n_degraded == 1
+
+    async def main():
+        return await h.result()
+
+    r = asyncio.run(main())
+    assert r.done and r.generated == h.request.max_gen
+    assert r.finish_time <= r.deadline  # the degraded budget met its SLO
+
+
+def test_predicted_queue_delay_tracks_load(sim_env):
+    server = _sim_aio(sim_env)
+    empty = predicted_queue_delay(server.core)
+    assert empty == 0.0
+    for i in range(8):
+        server.submit(input_len=256, gen_len=400)
+    # requests sit in arrival events/pool until stepped; force intake
+    for _ in range(10):
+        server.core.step()
+    loaded = predicted_queue_delay(server.core)
+    assert loaded > empty
+    # the dry-run decision folds that delay into its completion estimate
+    dec = server.check_admission(input_len=64, gen_len=100, slo_ms=600_000)
+    assert dec.accept and dec.predicted_completion >= loaded
+
+
+def test_default_slo_from_config_sets_deadline(sim_env):
+    true_lat, est, mem = sim_env
+    server = ServingConfig(strategy="scls", workers=2,
+                           slo_ms=45_000).build_sim(true_lat, est, mem)
+    h = server.submit(input_len=32, gen_len=20)
+    assert h.request.deadline == pytest.approx(45.0)
+    server.drain()
+    assert server.metrics().slo_attainment == 1.0
+
+
+def test_slo_attainment_counts_missed_deadlines(sim_env):
+    """With admission disabled, recorded deadlines still score attainment
+    — every deadline here is blown, so attainment is 0."""
+    server = _sim_aio(sim_env)
+    server.admission = NO_ADMISSION
+    server.default_slo_ms = 0.5  # 0.5 ms: unmeetable, but never enforced
+    for i in range(3):
+        server.submit(input_len=64, gen_len=100)
+    server.core.run_until_idle()
+    m = server.metrics()
+    assert m.n_completed == 3 and m.n_rejected == 0
+    assert m.slo_attainment == 0.0
+
+
+def test_admission_controller_validation():
+    with pytest.raises(ValueError, match="headroom"):
+        AdmissionController(headroom=0.0)
+    with pytest.raises(ValueError, match="time_scale"):
+        ServingConfig(strategy="scls", time_scale=-1.0)
+    with pytest.raises(ValueError, match="sim"):
+        ServingConfig(strategy="scls", backend="real", time_scale=2.0)
+    with pytest.raises(ValueError, match="slo_ms"):
+        ServingConfig(strategy="scls", slo_ms=0.0)
+    with pytest.raises(ValueError, match="http_port"):
+        ServingConfig(strategy="scls", http_port=70_000)
+
+
+def test_paced_server_maps_virtual_to_wall_time(sim_env):
+    """time_scale=k serves virtual second t at wall second t/k."""
+    import time
+    server = _sim_aio(sim_env, time_scale=100.0, gamma=1.0)
+
+    async def main():
+        t0 = time.monotonic()
+        h = server.submit(input_len=32, gen_len=100)
+        await h.result()
+        return time.monotonic() - t0, h
+
+    wall, h = asyncio.run(main())
+    virt = h.request.finish_time - h.request.arrival
+    # wall time must be at least the virtual span compressed by the scale
+    # (pacing sleeps), but nowhere near the uncompressed virtual time
+    assert wall >= virt / 100.0 * 0.5
+    assert wall < max(virt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# real backend: admission/cancel/drain with real engines + allocators
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def real_env():
+    import jax
+    from repro.configs import get_config
+    from repro.engine.profiler import fit_estimator
+    from repro.models.registry import get_model
+    arch = get_config("llama3.2-1b", reduced=True)
+    model = get_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    est, _, _ = fit_estimator(model, params, batch_sizes=(1, 2),
+                              input_lens=(16, 32), n_decode_iters=2, repeats=1)
+    return arch, model, params, est
+
+
+def _real_server(real_env, n_engines=2, **cfg_kw):
+    from repro.engine.static_engine import StaticEngine
+    arch, model, params, est = real_env
+    kw = dict(strategy="scls", backend="real", kv_layout="paged",
+              page_tokens=16, slice_len=8, max_gen=24, gamma=0.25,
+              m_available=64e6, mem_bucket=8)
+    kw.update(cfg_kw)
+    scfg = ServingConfig(**kw)
+    mem = scfg.memory_estimator(model.kv_bytes_per_token())
+    engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)
+               for _ in range(n_engines)]
+    return scfg.build_real(engines, est, mem)
+
+
+def test_real_backend_rejected_request_never_reserves_pages(real_env):
+    """Satellite acceptance: a 429-equivalent rejection happens before
+    any prefill or page reservation — every allocator's free-block count
+    is untouched and the engines never ran."""
+    arch, model, params, est = real_env
+    server = _real_server(real_env)
+    allocators = server.core.backend.allocators
+    baseline = [a.free_blocks for a in allocators]
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, arch.vocab_size, size=16).astype(np.int32)
+    with pytest.raises(AdmissionRejected):
+        server.submit(prompt, gen_len=20, max_gen=24, slo_ms=0.001)
+    assert [a.free_blocks for a in allocators] == baseline
+    assert all(not a.owners() for a in allocators)
+    assert server.core.requests == [] and server.core.batch_log == []
+    assert server.core.n_rejected == 1
+    # the same request without the impossible SLO is served for real
+    h = server.submit(prompt, gen_len=6, max_gen=24, slo_ms=600_000)
+    r = h.result()
+    assert r.done and r.generated == 6
+    assert [a.free_blocks for a in allocators] == baseline
+
+
+def test_real_backend_async_clients_and_drain(real_env):
+    """Concurrent asyncio clients over REAL engines: streams interleave,
+    one cancel races its slice, drain leaves no pages behind."""
+    arch, model, params, est = real_env
+    server = _real_server(real_env)
+    allocators = server.core.backend.allocators
+    baseline = [a.free_blocks for a in allocators]
+    rng = np.random.default_rng(1)
+    aio = server.aio
+
+    def prompt(n):
+        return rng.integers(0, arch.vocab_size, size=n).astype(np.int32)
+
+    async def streamer(i):
+        h = aio.submit(prompt(8 + i), gen_len=10 + i, max_gen=24,
+                       arrival=0.1 * i)
+        toks = [t async for t in h.tokens()]
+        return h, toks
+
+    async def canceller():
+        h = aio.submit(prompt(16), gen_len=20, max_gen=24)
+        async for _ in h.tokens():
+            h.cancel()   # first token observed: hang up mid-request
+            break
+        await h.result()
+        return h
+
+    async def main():
+        res = await asyncio.gather(streamer(0), streamer(1), canceller())
+        m = await aio.drain()
+        return res, m
+
+    (s0, s1, hc), m = asyncio.run(main())
+    for i, (h, toks) in enumerate((s0, s1)):
+        assert h.done and len(toks) == 10 + i
+        assert toks == h.request.output_tokens
+    assert hc.cancelled and hc.request.generated < 20
+    assert m.n_completed == 2
+    assert [a.free_blocks for a in allocators] == baseline
+    assert all(not a.owners() for a in allocators)

@@ -1,0 +1,154 @@
+"""repro.serving.http: the stdlib OpenAI-compatible endpoint — routing,
+non-streamed and SSE-streamed completions (one chunk per slice), and
+429 + Retry-After from SLO-aware admission."""
+import http.client
+import json
+import math
+
+import pytest
+
+from repro.serving import HTTPFrontend, ServingConfig
+from repro.serving.http import _BadRequest, encode_prompt
+
+SLICE = 8
+
+
+@pytest.fixture(scope="module")
+def frontend():
+    server = ServingConfig(strategy="scls", workers=2, slice_len=SLICE,
+                           gamma=0.25).build_sim()
+    front = HTTPFrontend(server.aio, port=0, model_name="scls-sim").start()
+    yield front
+    front.shutdown()
+
+
+def _request(front, method, path, body=None):
+    conn = http.client.HTTPConnection(front.host, front.port, timeout=60)
+    headers = {"Content-Type": "application/json"} if body is not None else {}
+    conn.request(method, path,
+                 json.dumps(body) if body is not None else None, headers)
+    resp = conn.getresponse()
+    raw = resp.read()
+    conn.close()
+    return resp, raw
+
+
+def test_healthz_and_models(frontend):
+    resp, raw = _request(frontend, "GET", "/healthz")
+    assert resp.status == 200
+    snap = json.loads(raw)
+    assert snap["status"] == "ok" and snap["strategy"] == "SCLS"
+    assert snap["backend"] == "SimBackend" and snap["workers"] == 2
+    resp, raw = _request(frontend, "GET", "/v1/models")
+    assert resp.status == 200
+    assert json.loads(raw)["data"][0]["id"] == "scls-sim"
+
+
+def test_completion_non_streamed(frontend):
+    resp, raw = _request(frontend, "POST", "/v1/completions",
+                         {"model": "scls-sim",
+                          "prompt": "tell me about slice level scheduling",
+                          "max_tokens": 20})
+    assert resp.status == 200
+    out = json.loads(raw)
+    assert out["object"] == "text_completion"
+    choice = out["choices"][0]
+    assert choice["finish_reason"] == "length"
+    assert [int(t) for t in choice["text"].split()] == list(range(20))
+    assert out["usage"] == {"prompt_tokens": 6, "completion_tokens": 20,
+                            "total_tokens": 26}
+
+
+def test_sse_emits_one_chunk_per_completed_slice(frontend):
+    """Tentpole acceptance: stream=true produces >= 1 SSE chunk per
+    completed slice (here: exactly one per slice, since slice boundaries
+    are recorded as they happen) and terminates with [DONE]."""
+    max_tokens = 40
+    resp, raw = _request(frontend, "POST", "/v1/completions",
+                         {"prompt": "stream this", "max_tokens": max_tokens,
+                          "stream": True})
+    assert resp.status == 200
+    assert resp.getheader("Content-Type") == "text/event-stream"
+    events = [e[len("data: "):] for e in raw.decode().split("\n\n")
+              if e.startswith("data: ")]
+    assert events[-1] == "[DONE]"
+    final = json.loads(events[-2])
+    assert final["choices"][0]["finish_reason"] == "length"
+    content = [json.loads(e) for e in events[:-2]]
+    n_slices = math.ceil(max_tokens / SLICE)
+    assert len(content) >= n_slices
+    toks = [int(t) for c in content for t in c["choices"][0]["text"].split()]
+    assert toks == list(range(max_tokens))
+    # chunk boundaries are slice boundaries: no chunk exceeds one slice
+    assert all(len(c["choices"][0]["text"].split()) <= SLICE
+               for c in content)
+
+
+def test_unmeetable_slo_rejected_with_429_before_any_work(frontend):
+    core = frontend.aserver.core
+    n_requests_before = len(core.requests)
+    batches_before = len(core.batch_log)
+    resp, raw = _request(frontend, "POST", "/v1/completions",
+                         {"prompt": 512, "max_tokens": 900, "slo_ms": 1})
+    assert resp.status == 429
+    assert int(resp.getheader("Retry-After")) >= 1
+    err = json.loads(raw)["error"]
+    assert err["type"] == "rate_limit_exceeded"
+    assert "deadline" in err["message"]
+    # nothing entered the scheduler
+    assert len(core.requests) == n_requests_before
+    assert len(core.batch_log) == batches_before
+    resp, raw = _request(frontend, "GET", "/metrics")
+    assert json.loads(raw)["n_rejected"] >= 1
+
+
+def test_meetable_slo_accepted(frontend):
+    resp, raw = _request(frontend, "POST", "/v1/completions",
+                         {"prompt": "quick one", "max_tokens": 8,
+                          "slo_ms": 600_000})
+    assert resp.status == 200
+    assert json.loads(raw)["usage"]["completion_tokens"] == 8
+
+
+def test_bad_requests_get_400_not_500(frontend):
+    for body in ({}, {"prompt": "x", "max_tokens": 0},
+                 {"prompt": "x", "max_tokens": "lots"},
+                 {"prompt": True}, {"prompt": []},
+                 {"prompt": "x", "slo_ms": -5}):
+        resp, raw = _request(frontend, "POST", "/v1/completions", body)
+        assert resp.status == 400, body
+        assert json.loads(raw)["error"]["type"] == "invalid_request_error"
+    resp, _ = _request(frontend, "GET", "/nope")
+    assert resp.status == 404
+    resp, _ = _request(frontend, "POST", "/v1/chat/completions",
+                       {"prompt": "x"})
+    assert resp.status == 404
+
+
+def test_metrics_endpoint_reports_run_metrics(frontend):
+    resp, raw = _request(frontend, "GET", "/metrics")
+    assert resp.status == 200
+    m = json.loads(raw)
+    for key in ("n_completed", "throughput", "ttft_mean", "p99_response",
+                "slo_attainment", "n_rejected", "n_submitted"):
+        assert key in m
+    assert m["n_completed"] >= 1
+
+
+def test_encode_prompt_shapes():
+    assert encode_prompt("three word prompt", 0) == {"input_len": 3}
+    assert encode_prompt(17, 0) == {"input_len": 17}
+    # with a real vocabulary an integer prompt must synthesize actual
+    # token ids (a real backend cannot run prompt=None)
+    filler = encode_prompt(7, 100)["prompt"]
+    assert filler.shape == (7,) and 0 <= filler.min() <= filler.max() < 100
+    out = encode_prompt("hash these words", 1000)
+    assert out["prompt"].shape == (3,) and out["prompt"].max() < 1000
+    ids = encode_prompt([5, 6, 7], 4)["prompt"]
+    assert list(ids) == [1, 2, 3]  # wrapped into the vocabulary
+    with pytest.raises(_BadRequest):
+        encode_prompt(0, 0)
+    with pytest.raises(_BadRequest):
+        encode_prompt([1, "a"], 0)
+    with pytest.raises(_BadRequest):
+        encode_prompt({"not": "supported"}, 0)
