@@ -26,13 +26,22 @@ binds the batch size long before compute does):
    prompts.  Token outputs are identical (tested in tests/test_engine.py);
    the paged engine sustains strictly higher peak parallelism and drains
    the workload in fewer iterations.
+
+3. KV retention (--real, PR 5): the same multi-slice workload through the
+   real SCLS backend with kv_retain="slice" (classic §3.3 re-prefill at
+   every reschedule) vs kv_retain="request" (persistent paged StaticEngine
+   storage: prefix pages survive, a resumed slice remaps its block table
+   and prefills nothing).  Reports re-prefill tokens saved and mean
+   per-slice latency; token streams are asserted identical and
+   reprefill_tokens == 0 for the retained run.  Emits
+   bench_results/BENCH_paged_retain.json (CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import copy
 import sys
 
-from benchmarks.common import DURATION, emit, fitted_estimator
+from benchmarks.common import DURATION, OUT_DIR, emit, fitted_estimator
 from repro.cluster.simulator import ClusterSimulator
 from repro.cluster.trace import WORKLOADS, generate_trace
 from repro.core.estimator import a100_llama13b_profile
@@ -158,7 +167,99 @@ def bench_paged_real(n_requests: int = 12, seed: int = 3):
     return rows
 
 
+def bench_paged_retain(n_requests: int = 8, gen_len: int = 24,
+                       slice_len: int = 8, seed: int = 5):
+    """kv_retain="slice" vs "request" on the real backend: same workload,
+    same budget — retention eliminates the §3.3 re-prefill entirely."""
+    import json
+    import os
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.engine.static_engine import StaticEngine
+    from repro.models.registry import get_model
+    from repro.serving import ServingConfig
+
+    cfg = get_config("llama3.2-1b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.engine.profiler import fit_estimator
+    est, _, _ = fit_estimator(model, params, batch_sizes=(1, 2),
+                              input_lens=(16, 64), n_decode_iters=2,
+                              repeats=1)
+    rng = np.random.default_rng(seed)
+    # multi-slice regime where re-prefill dominates: prompts much longer
+    # than the slice, gen spanning >= 3 slices
+    sizes = rng.integers(48, 128, size=n_requests)
+    prompts = [rng.integers(2, cfg.vocab_size, size=int(s)).astype(np.int32)
+               for s in sizes]
+    page_tokens = 16
+    delta = model.kv_bytes_per_token()
+    rows, streams = [], {}
+    for retain in ("slice", "request"):
+        scfg = ServingConfig(strategy="scls", backend="real",
+                             kv_layout="paged", page_tokens=page_tokens,
+                             kv_retain=retain, slice_len=slice_len,
+                             max_gen=2 * gen_len, gamma=0.25,
+                             m_available=delta * 16384, mem_bucket=8,
+                             workers=1)
+        mem = scfg.memory_estimator(delta)
+        if retain == "request":
+            engines = [StaticEngine(model, params, eos_id=1, len_bucket=8,
+                                    kv_layout="paged",
+                                    page_tokens=page_tokens,
+                                    kv_pool_tokens=mem.total_blocks
+                                    * page_tokens)]
+        else:
+            engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)]
+        server = scfg.build_real(engines, est, mem)
+        handles = [server.submit(p, gen_len=gen_len, max_gen=2 * gen_len,
+                                 arrival=0.05 * i)
+                   for i, p in enumerate(prompts)]
+        m = server.drain()
+        assert m.n_completed == n_requests
+        streams[retain] = [h.request.output_tokens for h in handles]
+        n_batches = server.core.total_batches
+        per_slice = m.makespan / max(n_batches, 1)
+        rows.append({"kv_retain": retain,
+                     "n_requests": n_requests,
+                     "gen_len": gen_len,
+                     "slice_len": slice_len,
+                     "n_slices": n_batches,
+                     "reprefill_tokens": m.reprefill_tokens,
+                     "makespan_s": round(m.makespan, 4),
+                     "per_slice_latency_s": round(per_slice, 5),
+                     "throughput": round(m.throughput, 3)})
+        print(f"[bench_paged:retain] {retain:7s} "
+              f"reprefill={m.reprefill_tokens:5d} tok  "
+              f"per_slice={per_slice*1e3:7.1f} ms  "
+              f"makespan={m.makespan:6.2f} s")
+    by = {r["kv_retain"]: r for r in rows}
+    assert streams["slice"] == streams["request"], \
+        "retention must be token-exact vs the dense re-prefill path"
+    assert by["request"]["reprefill_tokens"] == 0, \
+        "uninterrupted retained requests must never re-prefill"
+    assert by["slice"]["reprefill_tokens"] > 0
+    saved = by["slice"]["reprefill_tokens"]
+    speedup = (by["slice"]["per_slice_latency_s"]
+               / max(by["request"]["per_slice_latency_s"], 1e-9))
+    print(f"[bench_paged:retain] saved {saved} re-prefill tokens, "
+          f"per-slice speedup x{speedup:.2f}")
+    out = {"rows": rows, "reprefill_tokens_saved": saved,
+           "per_slice_speedup": round(speedup, 3)}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_paged_retain.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[bench_paged:retain] -> {path}")
+    return out
+
+
 if __name__ == "__main__":
-    bench_paged_sim()
-    if "--real" in sys.argv:
-        bench_paged_real()
+    if "--retain-only" not in sys.argv:
+        bench_paged_sim()
+    if "--real" in sys.argv or "--retain-only" in sys.argv:
+        if "--retain-only" not in sys.argv:
+            bench_paged_real()
+        bench_paged_retain()

@@ -76,7 +76,12 @@ def bench_fig12_throughput() -> List[Dict]:
                                  # replay sheds nothing (0 / 1.0); the
                                  # admission sweep lives in bench_serving
                                  n_rejected=m.n_rejected,
-                                 slo_attainment=round(m.slo_attainment, 4)))
+                                 slo_attainment=round(m.slo_attainment, 4),
+                                 # §3.3 rescheduling overhead, now measured
+                                 # first-class (sim: analytic dense cost;
+                                 # kv_retain="request" real runs report 0
+                                 # for uninterrupted requests)
+                                 reprefill_tokens=m.reprefill_tokens))
     emit(rows, "fig12_throughput_response")
     return rows
 

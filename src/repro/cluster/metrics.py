@@ -35,6 +35,13 @@ class RunMetrics:
     # submitted every completion trivially attains its (absent) SLO
     n_rejected: int = 0         # shed by admission before any prefill
     slo_attainment: float = 1.0  # completed-with-deadline meeting it
+    # --- §3.3 rescheduling overhead (persistent paged KV, PR 5) ---
+    # tokens prefilled beyond each request's FIRST prefill, summed over the
+    # run: the cost slice-level scheduling pays to reschedule.  The
+    # kv_retain="request" real backend drives this to 0 for uninterrupted
+    # requests (prefix pages survive, re-prefill becomes a page-table
+    # remap); the sim backend reports the analytic dense cost.
+    reprefill_tokens: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -44,7 +51,8 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
                     worker_completion_times: Sequence[float],
                     batch_sizes: Sequence[int],
                     early_returns: int, total_batches: int,
-                    n_rejected: int = 0) -> RunMetrics:
+                    n_rejected: int = 0,
+                    reprefill_tokens: int = 0) -> RunMetrics:
     done = [r for r in requests if r.done and r.finish_time is not None]
     # SLO attainment: of the completed requests that carried a deadline
     # (online submissions with slo_ms), the fraction that met it.  Shed
@@ -86,4 +94,5 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
         makespan=float(ct.max()),
         n_rejected=int(n_rejected),
         slo_attainment=slo_attainment,
+        reprefill_tokens=int(reprefill_tokens),
     )

@@ -116,6 +116,16 @@ class PagedMemoryEstimator(MemoryEstimator):
     ``reserved_blocks`` stays 0 there — any future overlapped-execution
     runtime must reserve around each in-flight slice or it will
     over-admit.
+
+    Retention (``kv_retain``, the persistent-paged StaticEngine path):
+    with ``kv_retain="request"`` the real backend keeps each in-flight
+    request's prefix pages resident across slices, and ``retained_blocks``
+    gauges them.  The Eq. 5–9 feasibility math deliberately still counts
+    retained pages as *free*: retained prefixes are reclaimable on demand
+    (the engine's evict-on-pressure path falls back to classic §3.3
+    re-prefill), so a scheduled batch can always claim its envelope — the
+    no-OOM guarantee is exactly the slice-scoped one, while the gauge
+    makes the retention state observable (``/healthz``, benchmarks).
     """
 
     delta_bytes: float          # Δ: KV bytes per token (per model shard)
@@ -123,13 +133,20 @@ class PagedMemoryEstimator(MemoryEstimator):
     page_tokens: int = 16       # block size in cache slots
     zeta: float = 1.0           # engine fragmentation factor (Eq. 9)
     bucket: int = 1
+    kv_retain: str = "slice"    # "slice" | "request" (see RealBackend)
 
     def __post_init__(self):
+        if self.kv_retain not in ("slice", "request"):
+            raise ValueError(f"unknown kv_retain {self.kv_retain!r} "
+                             f"(expected 'slice' or 'request')")
         bytes_per_block = self.page_tokens * self.delta_bytes
         self.total_blocks = (int(self.zeta * self.m_available
                                  // bytes_per_block)
                              if bytes_per_block > 0 else 0)
         self.reserved_blocks = 0
+        #: observability gauge (never admission): blocks currently held by
+        #: retained/in-flight requests on the real engines
+        self.retained_blocks = 0
 
     # ------------------------------------------------------------------
     @property

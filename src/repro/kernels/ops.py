@@ -21,6 +21,8 @@ from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_prefill import flash_prefill as _prefill_pallas
 from repro.kernels.paged_decode_attention import (
     paged_decode_attention as _paged_decode_pallas)
+from repro.kernels.paged_prefill_write import (
+    paged_prefill_write as _paged_write_pallas)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
 _DEFAULT_IMPL = "xla"
@@ -92,6 +94,29 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, slot_pos, q_pos,
                                     interpret=_interpret())
     return ref.paged_decode_attention_ref(q, k_pages, v_pages, block_table,
                                           slot_pos, q_pos, window=window)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def paged_prefill_write(k_new, v_new, positions, block_table, k_pages,
+                        v_pages, impl: Optional[str] = None):
+    """Write prefill K/V into the paged pool through block tables.
+
+    k/v_new (B,T,Hkv,D) in the repo's left-padded layout; positions (B,T)
+    from ``models.transformer.make_positions`` (pads < 0, real tokens at
+    their absolute position — which IS the destination logical slot in
+    the persistent-paged layout); block_table (B,nb); k/v_pages
+    (P,pg,Hkv,D).  Returns the updated (k_pages, v_pages); pads land in
+    the null page.  Tail slots of a row's last owned page differ between
+    impls (the Pallas kernel copies whole pages) but are masked by
+    ``slot_pos`` until decode overwrites them — never observable.
+    """
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        pad = jnp.sum(positions < 0, axis=1).astype(jnp.int32)
+        return _paged_write_pallas(k_new, v_new, pad, block_table,
+                                   k_pages, v_pages, interpret=_interpret())
+    return ref.paged_prefill_write_ref(k_new, v_new, positions, block_table,
+                                       k_pages, v_pages)
 
 
 @partial(jax.jit, static_argnames=("chunk", "impl"))

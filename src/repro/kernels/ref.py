@@ -36,6 +36,31 @@ def flash_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return o.reshape(B, T, Hq, D).astype(q.dtype)
 
 
+def paged_prefill_write_ref(k_new: jnp.ndarray, v_new: jnp.ndarray,
+                            dest_slot: jnp.ndarray, block_table: jnp.ndarray,
+                            k_pages: jnp.ndarray, v_pages: jnp.ndarray):
+    """Scatter prefill K/V into a paged KV pool through block tables.
+
+    k/v_new (B,T,Hkv,D); dest_slot (B,T) int32 — the *logical* cache slot
+    each token lands in (< 0 = pad, routed to the null page 0 whose slots
+    are permanently masked); block_table (B,nb); k/v_pages (P,pg,Hkv,D).
+    Token (b,t) is written to page ``block_table[b, dest_slot//pg]`` at
+    offset ``dest_slot % pg``.  Returns the updated (k_pages, v_pages) —
+    the paged twin of ``attention_prefill``'s dense cache build.
+    """
+    B, T, Hkv, D = k_new.shape
+    pg = k_pages.shape[1]
+    nb = block_table.shape[1]
+    valid = dest_slot >= 0
+    slot = jnp.clip(dest_slot, 0, nb * pg - 1)
+    page = jnp.take_along_axis(block_table, slot // pg, axis=1)
+    page = jnp.where(valid, page, 0).reshape(-1)   # pads -> null page
+    off = jnp.where(valid, slot % pg, 0).reshape(-1)
+    k_pages = k_pages.at[page, off].set(k_new.reshape(B * T, Hkv, D))
+    v_pages = v_pages.at[page, off].set(v_new.reshape(B * T, Hkv, D))
+    return k_pages, v_pages
+
+
 def paged_decode_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                                v_pages: jnp.ndarray, block_table: jnp.ndarray,
                                slot_pos: jnp.ndarray, q_pos: jnp.ndarray,

@@ -20,12 +20,17 @@ form.
 """
 from repro.core.memory import blocks_for
 from repro.kvcache.allocator import PageAllocator
-from repro.kvcache.paged import (PagedKVCache, init_paged_kv_cache,
-                                 clear_row, write_prefill_pages)
+from repro.kvcache.paged import (PagedKVCache, append_prefill,
+                                 batch_block_table, batch_slot_pos,
+                                 clear_row, init_paged_kv_cache,
+                                 write_prefill_pages)
 
 __all__ = [
     "PageAllocator",
     "PagedKVCache",
+    "append_prefill",
+    "batch_block_table",
+    "batch_slot_pos",
     "blocks_for",
     "init_paged_kv_cache",
     "clear_row",

@@ -75,6 +75,49 @@ class PageAllocator:
         self._owned[owner] = pages
         return list(pages)
 
+    def extend(self, owner: int, n_tokens: int) -> List[int]:
+        """Grow ``owner``'s reservation to cover ``n_tokens`` cache slots;
+        returns the newly added page ids (``[]`` when it already covers).
+
+        The retention path's slice-start call (kv_retain="request"): a
+        resumed request holds its trimmed prefix pages and only the slice
+        growth ``+S`` is new.  All-or-nothing like ``reserve`` — on
+        ``MemoryError`` the owner's existing pages are untouched.
+        """
+        pages = self._owned.get(owner)
+        if pages is None:
+            raise KeyError(f"owner {owner} holds no pages — use reserve()")
+        need = self.blocks_for_tokens(n_tokens) - len(pages)
+        if need <= 0:
+            return []
+        if need > self.free_blocks:
+            raise MemoryError(
+                f"owner {owner}: extend needs {need} blocks, "
+                f"{self.free_blocks} free")
+        new = [self._free.pop() for _ in range(need)]
+        pages.extend(new)
+        return list(new)
+
+    def shrink(self, owner: int, n_tokens: int) -> int:
+        """Return ``owner``'s trailing pages beyond ``n_tokens`` coverage to
+        the free list; returns the count freed.
+
+        The retention path's slice-end trim: the slice envelope reserved
+        ``(resident + S)`` but only ``steps <= S`` tokens were written, so
+        the slack pages go back to the pool while the prefix stays
+        resident.  Pages are freed from the tail (highest logical blocks),
+        so the retained prefix mapping is untouched.
+        """
+        pages = self._owned.get(owner)
+        if pages is None:
+            raise KeyError(f"owner {owner} holds no pages")
+        keep = self.blocks_for_tokens(n_tokens)
+        freed = 0
+        while len(pages) > max(keep, 0):
+            self._free.append(pages.pop())
+            freed += 1
+        return freed
+
     def release(self, owner: int, *, missing_ok: bool = False) -> int:
         """Return ``owner``'s pages to the free list; returns the count.
 

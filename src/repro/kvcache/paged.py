@@ -100,6 +100,71 @@ def write_prefill_pages(cache: PagedKVCache, row: int, page_ids: List[int],
     )
 
 
+def append_prefill(cache: PagedKVCache, row: int, page_ids: List[int],
+                   k: jnp.ndarray, v: jnp.ndarray, start: int, n_new: int
+                   ) -> PagedKVCache:
+    """Append K/V for tokens ``[start, start + n_new)`` of one row.
+
+    The *compact* layout (logical slot == absolute position, no pad
+    slots) used by the persistent-paged engine: ``page_ids`` is the row's
+    full page list (first block first), ``k``/``v`` are (L, n_new, Hkv, D)
+    for just the new tokens.  Slots before ``start`` (the retained
+    prefix) are untouched; slot_pos/lengths/block_table are refreshed for
+    the row.  This is the host-side twin of the batched in-graph path
+    (``models.transformer.prefill_paged``) — used for single-row delta
+    prefills and as the reference in tests.
+    """
+    L, _, pg, Hkv, D = cache.k_pages.shape
+    n_total = start + n_new
+    if n_total > len(page_ids) * pg:
+        raise ValueError(f"{n_total} slots exceed {len(page_ids)} pages "
+                         f"of {pg}")
+    nb = cache.block_table.shape[1]
+    if len(page_ids) > nb:
+        raise ValueError(f"{len(page_ids)} pages exceed the {nb}-block table")
+    k_pages, v_pages = cache.k_pages, cache.v_pages
+    for t in range(n_new):
+        slot = start + t
+        page, off = page_ids[slot // pg], slot % pg
+        k_pages = k_pages.at[:, page, off].set(k[:, t])
+        v_pages = v_pages.at[:, page, off].set(v[:, t])
+    bt_row = np.zeros((nb,), np.int32)
+    bt_row[:len(page_ids)] = page_ids
+    sp_row = np.full((nb * pg,), -1, np.int32)
+    sp_row[:n_total] = np.arange(n_total)
+    return cache._replace(
+        k_pages=k_pages, v_pages=v_pages,
+        block_table=cache.block_table.at[row].set(jnp.asarray(bt_row)),
+        slot_pos=cache.slot_pos.at[row].set(jnp.asarray(sp_row)),
+        lengths=cache.lengths.at[row].set(n_total),
+    )
+
+
+def batch_block_table(pages_per_row: List[List[int]], n_blocks: int
+                      ) -> np.ndarray:
+    """Assemble a (B, nb) block table from per-row page lists (padded with
+    the null page) — how the persistent engine remaps each batch member's
+    retained pages into the dispatched batch's table."""
+    B = len(pages_per_row)
+    bt = np.zeros((B, n_blocks), np.int32)
+    for b, pages in enumerate(pages_per_row):
+        if len(pages) > n_blocks:
+            raise ValueError(f"row {b}: {len(pages)} pages exceed the "
+                             f"{n_blocks}-block table")
+        bt[b, :len(pages)] = pages
+    return bt
+
+
+def batch_slot_pos(lengths: List[int], n_blocks: int, page_tokens: int
+                   ) -> np.ndarray:
+    """(B, nb·pg) slot_pos for the compact layout: slot s of row b holds
+    absolute position s for s < lengths[b], -1 (masked) beyond."""
+    W = n_blocks * page_tokens
+    slots = np.arange(W, dtype=np.int32)[None]
+    lens = np.asarray(lengths, np.int32)[:, None]
+    return np.where(slots < lens, slots, -1).astype(np.int32)
+
+
 def clear_row(cache: PagedKVCache, row: int) -> PagedKVCache:
     """Evict a row: point its blocks at the null page and mask every slot.
 

@@ -8,6 +8,12 @@
   # discrete-event sim backend (no model, CI smoke): same scheduler code
   PYTHONPATH=src python -m repro.launch.serve --backend sim --duration 3
 
+  # persistent paged KV storage: prefix pages survive across slices, so a
+  # resumed slice re-prefills nothing (metrics: reprefill_tokens == 0 for
+  # uninterrupted requests; --kv-retain slice restores §3.3 re-prefill)
+  PYTHONPATH=src python -m repro.launch.serve --kv-layout paged \
+      --kv-retain request --workers 1
+
   # prediction-aware scheduling (repro.predict): online histogram predictor
   PYTHONPATH=src python -m repro.launch.serve --strategy scls-pred \
       --predictor histogram --coverage 0.7
@@ -66,9 +72,24 @@ def build_server(cfg: ServingConfig) -> tuple[SliceServer, int]:
     mem = cfg.memory_estimator(model.kv_bytes_per_token())
     if cfg.kv_layout == "paged":
         print(f"[serve] paged KV: {mem.total_blocks} blocks of "
-              f"{cfg.page_tokens} tokens per worker")
-    engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)
-               for _ in range(cfg.workers)]
+              f"{cfg.page_tokens} tokens per worker "
+              f"(kv_retain={cfg.kv_retain})")
+    if cfg.kv_retain == "request":
+        # persistent paged storage: each engine owns the page pool the
+        # scheduler budgets, and prefix pages survive across slices
+        if arch.family != "dense":
+            raise SystemExit(f"--kv-retain request drives the persistent "
+                             f"paged StaticEngine (dense family only); "
+                             f"{cfg.arch} is {arch.family}")
+        engines = [StaticEngine(model, params, eos_id=1, len_bucket=8,
+                                kv_layout="paged",
+                                page_tokens=cfg.page_tokens,
+                                kv_pool_tokens=mem.total_blocks
+                                * cfg.page_tokens)
+                   for _ in range(cfg.workers)]
+    else:
+        engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)
+                   for _ in range(cfg.workers)]
     return cfg.build_real(engines, est, mem), arch.vocab_size
 
 
@@ -147,7 +168,8 @@ def main() -> None:
     done = [h for h in handles if h.done]
     print(f"[serve] completed {len(done)}/{len(trace)}; "
           f"TTFT mean {metrics.ttft_mean:.3f}s, "
-          f"p99 latency {metrics.p99_response:.3f}s")
+          f"p99 latency {metrics.p99_response:.3f}s, "
+          f"reprefill {metrics.reprefill_tokens} tokens")
     if done:
         print(f"[serve] sample output ({done[0].rid}): "
               f"{done[0].output_tokens[:12]}")

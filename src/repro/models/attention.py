@@ -234,6 +234,41 @@ def attention_prefill(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
     return out, kc, vc
 
 
+def attention_prefill_paged(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                            cfg: ModelConfig, window: Optional[int],
+                            k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                            block_table: jnp.ndarray,
+                            mask: Optional[jnp.ndarray] = None,
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill that lands K/V in the paged pool (``repro.kvcache``).
+
+    The attention math is ``attention_prefill``'s exactly; instead of a
+    padded dense (B, W) cache, each valid token's K/V is written to page
+    ``block_table[b, pos // pg]`` at offset ``pos % pg`` via
+    ``kernels.ops.paged_prefill_write`` (pads land in the null page).
+    Mirrors ``attention_decode_paged`` so prefill and decode both read
+    and write the same persistent page pool.  Returns
+    (out, k_pages, v_pages).
+    """
+    from repro.kernels import ops as kernel_ops  # deferred: keep models importable without kernels
+    B, T, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    rp = jnp.maximum(positions, 0)
+    q = apply_rope(q, rp, cfg.rope_theta)
+    k = apply_rope(k, rp, cfg.rope_theta)
+    scale = cfg.head_dim ** -0.5
+    if T >= CHUNK_THRESHOLD:
+        o = gqa_attend_chunked(q, k, v, scale, positions, positions, window)
+    else:
+        if mask is None:
+            mask = prefill_mask(positions, window)
+        o = gqa_attend(q, k, v, mask, scale)
+    out = dense_apply(p["wo"], o.reshape(B, T, -1))
+    k_pages, v_pages = kernel_ops.paged_prefill_write(
+        k, v, positions, block_table, k_pages, v_pages)
+    return out, k_pages, v_pages
+
+
 def attention_decode(p: Params, x: jnp.ndarray, q_pos: jnp.ndarray,
                      k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      slot_pos: jnp.ndarray, slot: jnp.ndarray,

@@ -146,6 +146,49 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     return logits[:, 0], cache
 
 
+def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  lengths: jnp.ndarray, cache: PagedKVCache,
+                  window: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, PagedKVCache]:
+    """Prefill that writes K/V straight into the paged pool.
+
+    The paged twin of ``prefill``: same left-padded attention math, but
+    per-layer K/V land in ``cache.k_pages``/``v_pages`` through the
+    per-row block tables (``attention.attention_prefill_paged`` →
+    ``kernels.ops.paged_prefill_write``) instead of a transient dense
+    (B, W) buffer — so prefix KV survives the slice boundary and a
+    resumed slice never re-prefills (``engine.static_engine``, paper
+    §3.3).  Layout: logical slot == absolute position (no pad slots);
+    ``slot_pos``/``lengths`` of the prefilled rows are refreshed
+    accordingly.  Token-only dense archs (no ``prefix_embeds``).
+    """
+    window = window if window is not None else cfg.sliding_window
+    positions = make_positions(tokens, lengths)
+    h = embed_apply(params["embed"], tokens, cfg)
+    B, T = positions.shape
+    big = T >= attn.CHUNK_THRESHOLD
+    mask = None if big else attn.prefill_mask(positions, window)
+
+    def body(carry, layer, kp, vp):
+        x = rms_norm(carry, layer["ln_attn"], cfg.norm_eps)
+        a, kp, vp = attn.attention_prefill_paged(
+            layer["attn"], x, positions, cfg, window, kp, vp,
+            cache.block_table, mask=mask)
+        h2 = carry + a
+        m = mlp_apply(layer["mlp"], rms_norm(h2, layer["ln_mlp"], cfg.norm_eps), cfg.act)
+        return h2 + m, (kp, vp)
+
+    h, (k_all, v_all) = scan_layers(body, h, params["layers"],
+                                    cache.k_pages, cache.v_pages)
+    logits = _logits(params, cfg, h[:, -1:, :])
+    W = cache.window
+    slots = jnp.arange(W, dtype=jnp.int32)[None]
+    slot_pos = jnp.where(slots < lengths[:, None], slots, -1)
+    return logits[:, 0], cache._replace(k_pages=k_all, v_pages=v_all,
+                                        slot_pos=slot_pos,
+                                        lengths=lengths.astype(jnp.int32))
+
+
 def decode_step(params: Params, cfg: ModelConfig, cache: KVCache,
                 tokens: jnp.ndarray, step: jnp.ndarray,
                 window: Optional[int] = None) -> Tuple[jnp.ndarray, KVCache]:

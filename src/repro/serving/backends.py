@@ -16,10 +16,21 @@ outcomes.  That variation is this module's ``Backend`` protocol:
     :class:`~repro.engine.static_engine.StaticEngine` workers (every FLOP
     real), durations are measured wall time, token outcomes come from the
     model.  With ``kv_layout="paged"`` each worker owns a real
-    :class:`~repro.kvcache.PageAllocator`; the ``(L_i + S)`` slice
-    envelope is reserved at dispatch and released when the core processes
-    the slice-completion event, so mid-flight state (including
-    cancellation) is always visible in the free-block count.
+    :class:`~repro.kvcache.PageAllocator`.  The envelope lifetime is the
+    ``kv_retain`` policy:
+
+      - ``"slice"`` (default, PR 2 semantics): the ``(L_i + S)`` slice
+        envelope is reserved at dispatch and released when the core
+        processes the slice-completion event, and the engine re-prefills
+        prompt + generated on every reschedule (paper §3.3);
+      - ``"request"``: the engines store K/V *in* the pages
+        (``StaticEngine.serve_batch_paged``) and keep each in-flight
+        request's prefix pages resident across slices — a resumed slice
+        remaps its retained pages into the batch block table and
+        re-prefills nothing.  Pages are released only on
+        finish/cancel (:meth:`finish_request`) or by the engine's
+        evict-on-pressure / worker-migration fallback, which re-prefills
+        classically so memory safety is unchanged.
 
 Backends are intentionally *stateless about scheduling*: they never see
 the pool, the offloader, or the predictor.  A new backend (e.g. an RPC
@@ -55,12 +66,16 @@ class BatchExecution:
     consumers synthesize them lazily instead of the core materializing
     millions of ints during offline paper-scale replays).
     ``finished`` marks EOS/forced completion as observed by the engine.
+    ``reprefill_tokens`` counts tokens prefilled beyond each member's
+    first prefill (the §3.3 rescheduling overhead this slice paid) — 0
+    for retained residents on the persistent paged path.
     """
 
     duration: float
     steps: int
     early_return: bool
     per_request: List[RequestOutcome]
+    reprefill_tokens: int = 0
 
 
 @runtime_checkable
@@ -85,6 +100,13 @@ class Backend(Protocol):
     def finish_batch(self, wid: int, batch: Batch) -> None:
         """The slice-completion event for ``batch`` is being processed:
         release any per-slice resources (e.g. the paged KV envelope)."""
+        ...
+
+    def finish_request(self, req: Request) -> None:
+        """``req`` just went terminal (finished or cancelled): release any
+        per-REQUEST resources retained across slices (the persistent
+        paged prefix pages under ``kv_retain="request"``).  Must be an
+        idempotent no-op when nothing is retained."""
         ...
 
     def prefill_time(self, req: Request) -> float:
@@ -127,9 +149,12 @@ class SimBackend:
         dur = self.true_lat.t_serve(batch.size, batch.input_len,
                                     steps) * self._noise()
         per: List[RequestOutcome] = []
+        reprefill = 0
         for r in batch.requests:
             remaining = r.remaining_gen
             gen_now = min(remaining, steps)
+            if r.generated > 0:  # §3.3: a reschedule re-prefills everything
+                reprefill += r.effective_input_len
             per.append(dict(
                 tokens=None,  # sim: synthesized lazily (generation indices)
                 n_valid=gen_now,
@@ -138,10 +163,14 @@ class SimBackend:
                 finished=remaining - gen_now <= 0))
         return BatchExecution(duration=dur, steps=steps,
                               early_return=steps < batch.slice_len,
-                              per_request=per)
+                              per_request=per,
+                              reprefill_tokens=reprefill)
 
     def finish_batch(self, wid: int, batch: Batch) -> None:
         pass  # no per-slice resources in virtual time
+
+    def finish_request(self, req: Request) -> None:
+        pass  # no per-request resources in virtual time
 
     def prefill_time(self, req: Request) -> float:
         return self.true_lat.t_prefill(
@@ -162,11 +191,26 @@ class RealBackend:
     observe.  Token outcomes (EOS, invalid, pads) come from the engine.
 
     ``kv_layout="paged"``: each worker gets a real
-    :class:`~repro.kvcache.PageAllocator`; ``run_batch`` reserves every
-    member's ``(L_i + S)`` envelope and ``finish_batch`` releases it, so
-    a MemoryError here means the DP batcher violated its own no-OOM
-    constraint.  Continuous modes are not supported (the ILS baseline on
-    real JAX lives in ``repro.engine.continuous_engine``).
+    :class:`~repro.kvcache.PageAllocator`.  ``kv_retain`` picks the
+    envelope lifetime:
+
+      * ``"slice"`` (default): ``run_batch`` reserves every member's
+        ``(L_i + S)`` envelope and ``finish_batch`` releases it — the
+        engine stays contiguous-transient and re-prefills on every
+        reschedule (PR 2 semantics, a MemoryError means the DP batcher
+        violated its own no-OOM constraint);
+      * ``"request"``: the engines must be persistent-paged
+        (``StaticEngine(kv_layout="paged")``); the backend dispatches
+        through ``serve_batch_paged`` so resumed requests keep their
+        prefix pages and re-prefill nothing, and pages are released only
+        when the core finalizes the request (:meth:`finish_request`) or
+        when the engine evicts under pressure.  A request whose next
+        slice lands on a *different* worker releases its old worker's
+        pages and re-prefills there (retention is per-engine; the
+        re-prefill is counted in ``reprefill_tokens``).
+
+    Continuous modes are not supported (the ILS baseline on real JAX
+    lives in ``repro.engine.continuous_engine``).
     """
 
     supports_continuous = False
@@ -174,9 +218,19 @@ class RealBackend:
     def __init__(self, engines: Sequence[StaticEngine],
                  mem: Optional[MemoryEstimator] = None,
                  kv_layout: str = "dense",
-                 sched_bucket: int = 1):
+                 sched_bucket: int = 1,
+                 kv_retain: str = "slice"):
         self.engines = list(engines)
         self.allocators: Optional[List[PageAllocator]] = None
+        if kv_retain not in ("slice", "request"):
+            raise ValueError(f"unknown kv_retain {kv_retain!r} "
+                             f"(expected 'slice' or 'request')")
+        self.kv_retain = kv_retain
+        self.mem = mem if isinstance(mem, PagedMemoryEstimator) else None
+        #: kv_retain="request": worker whose engine retains each rid's pages
+        self._engine_of: Dict[int, int] = {}
+        if kv_retain == "request" and kv_layout != "paged":
+            raise ValueError("kv_retain='request' needs kv_layout='paged'")
         if kv_layout == "paged":
             if not isinstance(mem, PagedMemoryEstimator):
                 raise TypeError("kv_layout='paged' needs a PagedMemoryEstimator")
@@ -189,8 +243,30 @@ class RealBackend:
                 raise ValueError(
                     f"PagedMemoryEstimator.bucket ({mem.bucket}) must be a "
                     f"multiple of the estimator bucket ({sched_bucket})")
-            self.allocators = [PageAllocator(mem.total_blocks, mem.page_tokens)
-                               for _ in self.engines]
+            if kv_retain == "request":
+                for i, e in enumerate(self.engines):
+                    if getattr(e, "kv_layout", "dense") != "paged":
+                        raise TypeError(
+                            f"kv_retain='request' needs persistent-paged "
+                            f"engines (StaticEngine(kv_layout='paged')); "
+                            f"engine {i} is {getattr(e, 'kv_layout', 'dense')!r}")
+                    if e.allocator.page_tokens != mem.page_tokens:
+                        raise ValueError(
+                            f"engine {i} page_tokens "
+                            f"({e.allocator.page_tokens}) != estimator's "
+                            f"({mem.page_tokens})")
+                    if e.allocator.n_pages < mem.total_blocks:
+                        raise ValueError(
+                            f"engine {i} pool ({e.allocator.n_pages} pages) "
+                            f"smaller than the scheduler's budget "
+                            f"({mem.total_blocks}): the batcher would "
+                            f"over-admit")
+                # the engines' own allocators ARE the slice envelopes here
+                self.allocators = [e.allocator for e in self.engines]
+            else:
+                self.allocators = [PageAllocator(mem.total_blocks,
+                                                 mem.page_tokens)
+                                   for _ in self.engines]
 
     # ------------------------------------------------------------------
     def run_batch(self, wid: int, batch: Batch,
@@ -200,25 +276,56 @@ class RealBackend:
         # gen_len=None → EOS-driven: the engine detects the model's own EOS
         forced = [r.remaining_gen if r.gen_len is not None else EOS_DRIVEN
                   for r in batch.requests]
-        if self.allocators is not None:
-            alloc = self.allocators[wid]
+        if self.kv_retain == "request":
+            # worker migration: pages retained elsewhere are unreachable
+            # from this engine — release them there, re-prefill here
             for r in batch.requests:
-                # slice start: every member holds the batch envelope
-                # L_i + S (rows are padded to the batch input length,
-                # as the engine's per-batch cache is)
-                alloc.reserve(r.rid, batch.input_len + batch.slice_len)
-        res = eng.serve_batch(prompts, batch.slice_len,
-                              forced_gen_lens=forced,
-                              already_generated=list(prev_tokens))
+                old = self._engine_of.get(r.rid)
+                if old is not None and old != wid:
+                    self.engines[old].release_request(r.rid)
+                self._engine_of[r.rid] = wid
+            res = eng.serve_batch_paged(prompts, batch.slice_len,
+                                        [r.rid for r in batch.requests],
+                                        forced_gen_lens=forced,
+                                        already_generated=list(prev_tokens))
+            self._sync_retained_gauge()
+        else:
+            if self.allocators is not None:
+                alloc = self.allocators[wid]
+                for r in batch.requests:
+                    # slice start: every member holds the batch envelope
+                    # L_i + S (rows are padded to the batch input length,
+                    # as the engine's per-batch cache is)
+                    alloc.reserve(r.rid, batch.input_len + batch.slice_len)
+            res = eng.serve_batch(prompts, batch.slice_len,
+                                  forced_gen_lens=forced,
+                                  already_generated=list(prev_tokens))
         return BatchExecution(duration=res.wall_time, steps=res.steps,
                               early_return=res.early_return,
-                              per_request=list(res.results))
+                              per_request=list(res.results),
+                              reprefill_tokens=res.reprefill_tokens)
 
     def finish_batch(self, wid: int, batch: Batch) -> None:
+        if self.kv_retain == "request":
+            return  # retention: the engine trimmed to the resident prefix
         if self.allocators is not None:
             alloc = self.allocators[wid]
             for r in batch.requests:  # slice end: envelope freed
                 alloc.release(r.rid)
+
+    def finish_request(self, req: Request) -> None:
+        """Terminal (finished/cancelled): free the retained prefix pages."""
+        if self.kv_retain != "request":
+            return
+        wid = self._engine_of.pop(req.rid, None)
+        if wid is not None:
+            self.engines[wid].release_request(req.rid)
+            self._sync_retained_gauge()
+
+    def _sync_retained_gauge(self) -> None:
+        if self.mem is not None:
+            self.mem.retained_blocks = sum(a.used_blocks
+                                           for a in self.allocators)
 
     def free_blocks(self) -> List[int]:
         """Per-worker free KV-block counts (paged layout; ``[]`` when

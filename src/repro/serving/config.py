@@ -58,6 +58,11 @@ class ServingConfig:
     # --- KV layout (repro.kvcache) ---
     kv_layout: str = "dense"             # "dense" | "paged"
     page_tokens: int = 16
+    # envelope lifetime on the paged real backend: "slice" reserves and
+    # releases per slice (re-prefill every reschedule, §3.3); "request"
+    # keeps prefix pages resident in the engines across slices so a
+    # resumed slice re-prefills nothing (persistent StaticEngine storage)
+    kv_retain: str = "slice"             # "slice" | "request"
     # --- generation-length prediction (repro.predict) ---
     predictor: Optional[str] = None      # scls-pred/oracle only
     coverage: float = 0.7
@@ -120,9 +125,31 @@ class ServingConfig:
             raise ValueError(f"need at least one worker, got {self.workers}")
         if self.slice_len <= 0 or self.max_gen <= 0:
             raise ValueError("slice_len and max_gen must be positive")
-        if self.page_tokens <= 0:
-            raise ValueError(f"page_tokens must be positive, "
+        # --page-tokens is the block-rounding unit of the whole paged
+        # subsystem (core.memory.blocks_for); a non-integer or < 1 value
+        # only surfaced later as an opaque shape/indexing failure deep in
+        # the allocator or kernels — reject it here with the fix spelled
+        # out instead
+        if isinstance(self.page_tokens, bool) \
+                or not isinstance(self.page_tokens, int):
+            raise ValueError(f"page_tokens must be an integer number of "
+                             f"cache slots per KV block, got "
+                             f"{self.page_tokens!r}")
+        if self.page_tokens < 1:
+            raise ValueError(f"page_tokens must be >= 1, "
                              f"got {self.page_tokens}")
+        if self.kv_retain not in ("slice", "request"):
+            raise ValueError(f"unknown kv_retain {self.kv_retain!r} "
+                             f"(expected 'slice' or 'request')")
+        if self.kv_retain == "request":
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "kv_retain='request' keeps prefix pages resident in "
+                    "the engines, which needs kv_layout='paged'")
+            if self.backend != "real":
+                raise ValueError(
+                    "kv_retain='request' is an engine-storage policy; the "
+                    "sim backend has no engine storage (use backend='real')")
         if self.bucket_phi <= 1.0:
             raise ValueError(f"bucket_phi must be > 1, got {self.bucket_phi}")
         if self.http_port is not None and not 0 <= self.http_port <= 65535:
@@ -173,6 +200,13 @@ class ServingConfig:
                              "reserves slice envelopes block by block")
         ap.add_argument("--page-tokens", type=int, default=cls.page_tokens,
                         help="cache slots per KV block for --kv-layout paged")
+        ap.add_argument("--kv-retain", default=cls.kv_retain,
+                        choices=["slice", "request"],
+                        help="paged real backend: 'slice' releases each "
+                             "member's envelope at slice end (re-prefill "
+                             "on reschedule); 'request' keeps prefix pages "
+                             "resident in the engines so resumed slices "
+                             "re-prefill nothing")
         ap.add_argument("--predictor", default=None, choices=list(PREDICTORS),
                         help="length predictor for --strategy scls-pred")
         ap.add_argument("--coverage", type=float, default=cls.coverage,
@@ -240,10 +274,20 @@ class ServingConfig:
         block pool)."""
         m_ava = self.m_available if m_available is None else m_available
         if self.kv_layout == "paged":
-            return PagedMemoryEstimator(delta_bytes=delta_bytes,
-                                        m_available=m_ava, zeta=self.zeta,
-                                        page_tokens=self.page_tokens,
-                                        bucket=self.mem_bucket)
+            mem = PagedMemoryEstimator(delta_bytes=delta_bytes,
+                                       m_available=m_ava, zeta=self.zeta,
+                                       page_tokens=self.page_tokens,
+                                       bucket=self.mem_bucket,
+                                       kv_retain=self.kv_retain)
+            if mem.total_blocks < 1:
+                # the downstream failure is an opaque PageAllocator /
+                # shape error; name the actual misconfiguration instead
+                raise ValueError(
+                    f"page_tokens={self.page_tokens} with "
+                    f"m_available={m_ava:g} and zeta={self.zeta} yields a "
+                    f"zero-block KV pool (block = page_tokens * Δ bytes); "
+                    f"lower --page-tokens or raise the memory budget")
+            return mem
         return AnalyticMemoryEstimator(delta_bytes=delta_bytes,
                                        m_available=m_ava, zeta=self.zeta,
                                        bucket=self.mem_bucket)
@@ -289,7 +333,8 @@ class ServingConfig:
                    mem: MemoryEstimator) -> SliceServer:
         """SliceServer over real StaticEngine workers (one per engine)."""
         backend = RealBackend(engines, mem=mem, kv_layout=self.kv_layout,
-                              sched_bucket=sched_est.bucket)
+                              sched_bucket=sched_est.bucket,
+                              kv_retain=self.kv_retain)
         core = SchedulerCore(self.strategy_config(), backend, len(engines),
                              sched_est, mem, ils_span=self.ils_span)
         return SliceServer(core, default_slo_ms=self.slo_ms)

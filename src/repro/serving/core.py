@@ -138,6 +138,10 @@ class SchedulerCore:
         self.batch_sizes: List[int] = []
         self.early_returns = 0
         self.total_batches = 0
+        #: §3.3 rescheduling overhead: tokens prefilled beyond each
+        #: request's first prefill, summed over all dispatched slices
+        #: (0 for resumed residents under kv_retain="request")
+        self.reprefill_tokens = 0
         self.peak_parallel = 0  # max concurrent requests on one worker
         #: dispatch fingerprint: ["static", wid, rids, input_len, slice] or
         #: ["cont", wid, rids] — pinned by the equivalence golden test
@@ -264,6 +268,10 @@ class SchedulerCore:
             # length evidence, and recording it would log a phantom
             # 1-token completion that biases caps toward zero
             self.pred.on_complete(r)
+        # per-request resources retained across slices (persistent paged
+        # prefix pages under kv_retain="request") are freed exactly here —
+        # the one place every terminal path goes through
+        self.backend.finish_request(r)
         self._finalized.add(r.rid)
         self._notify("final", r)
 
@@ -287,7 +295,8 @@ class SchedulerCore:
         return compute_metrics(self.s.name, list(self.requests), duration,
                                wct, self.batch_sizes, self.early_returns,
                                self.total_batches,
-                               n_rejected=self.n_rejected)
+                               n_rejected=self.n_rejected,
+                               reprefill_tokens=self.reprefill_tokens)
 
     # ------------------------------------------------------------------
     # event handlers
@@ -409,6 +418,7 @@ class SchedulerCore:
         w.completion_time = self.now
         self.total_batches += 1
         self.batch_sizes.append(b.size)
+        self.reprefill_tokens += ex.reprefill_tokens
         if ex.early_return:
             self.early_returns += 1
         self.backend.finish_batch(wid, b)  # e.g. release page envelopes

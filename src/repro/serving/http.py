@@ -207,6 +207,12 @@ class HTTPFrontend:
         if isinstance(core.backend, RealBackend) \
                 and core.backend.allocators is not None:
             snap["free_blocks"] = core.backend.free_blocks()
+            snap["kv_retain"] = core.backend.kv_retain
+            if core.backend.kv_retain == "request":
+                # prefix pages resident across slices (reclaimable on
+                # demand — see PagedMemoryEstimator.retained_blocks)
+                snap["retained_blocks"] = [a.used_blocks
+                                           for a in core.backend.allocators]
         return snap
 
     async def _metrics(self) -> Dict[str, Any]:

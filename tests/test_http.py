@@ -130,7 +130,8 @@ def test_metrics_endpoint_reports_run_metrics(frontend):
     assert resp.status == 200
     m = json.loads(raw)
     for key in ("n_completed", "throughput", "ttft_mean", "p99_response",
-                "slo_attainment", "n_rejected", "n_submitted"):
+                "slo_attainment", "n_rejected", "n_submitted",
+                "reprefill_tokens"):  # §3.3 overhead, first-class (PR 5)
         assert key in m
     assert m["n_completed"] >= 1
 

@@ -258,3 +258,66 @@ def test_ssd_ops_dispatch():
     y2, s2 = ops.ssd_chunked_scan(x, dt, A, Bm, Cm, chunk=8, impl="pallas")
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged prefill write (persistent paged StaticEngine storage)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,pg,Hkv,D", [
+    (1, 16, 8, 1, 8),
+    (2, 24, 8, 2, 16),
+    (3, 12, 4, 2, 8),   # non-pow2 batch, partial last page
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_write_matches_ref_on_observable_slots(B, T, pg, Hkv,
+                                                             D, dtype):
+    """Pallas and jnp impls agree on every slot a reader can reach (valid
+    slot_pos); tail slots of a partial page are masked garbage by
+    contract and excluded."""
+    rng = np.random.default_rng(0)
+    lens = rng.integers(1, T + 1, size=B)
+    lens[0] = T  # always one full row
+    positions = _positions(B, T, lens)
+    nb = -(-T // pg) + 1  # one spare block per row (decode capacity)
+    P = B * nb + 1
+    k_new = jax.random.normal(KEY, (B, T, Hkv, D), dtype)
+    v_new = jax.random.normal(jax.random.fold_in(KEY, 1), (B, T, Hkv, D), dtype)
+    bt = np.zeros((B, nb), np.int32)
+    perm = rng.permutation(np.arange(1, P))
+    for b in range(B):
+        bt[b] = perm[b * nb:(b + 1) * nb]
+    pool = jax.random.normal(jax.random.fold_in(KEY, 2), (P, pg, Hkv, D), dtype)
+    outs = {}
+    for impl in ("xla", "pallas"):
+        outs[impl] = ops.paged_prefill_write(
+            k_new, v_new, positions, jnp.asarray(bt), pool, pool, impl=impl)
+    for b in range(B):
+        ln = int(lens[b])
+        for impl in ("xla", "pallas"):
+            kk, vv = outs[impl]
+            gk = np.asarray(kk)[bt[b]].reshape(nb * pg, Hkv, D)
+            gv = np.asarray(vv)[bt[b]].reshape(nb * pg, Hkv, D)
+            # written tokens land at slot == position, bit-exact
+            np.testing.assert_array_equal(
+                gk[:ln], np.asarray(k_new)[b, T - ln:])
+            np.testing.assert_array_equal(
+                gv[:ln], np.asarray(v_new)[b, T - ln:])
+
+
+def test_paged_prefill_write_ref_leaves_unmapped_pages_untouched():
+    """The jnp oracle routes pads to the null page and never touches pages
+    outside the block tables."""
+    from repro.kernels.ref import paged_prefill_write_ref
+    B, T, pg, Hkv, D, P = 1, 8, 4, 1, 4, 5
+    k_new = jnp.ones((B, T, Hkv, D))
+    positions = _positions(B, T, [6])
+    bt = jnp.asarray([[2, 3]], jnp.int32)
+    pool = jnp.full((P, pg, Hkv, D), 7.0)
+    kk, _ = paged_prefill_write_ref(k_new, k_new, positions, bt, pool, pool)
+    kk = np.asarray(kk)
+    np.testing.assert_array_equal(kk[1], np.full((pg, Hkv, D), 7.0))
+    np.testing.assert_array_equal(kk[4], np.full((pg, Hkv, D), 7.0))
+    np.testing.assert_array_equal(kk[2], np.ones((pg, Hkv, D)))
+    np.testing.assert_array_equal(kk[3, :2], np.ones((2, Hkv, D)))
+    # pads hit only the null page
+    assert (kk[3, 2:] == 7.0).all()

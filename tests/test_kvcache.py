@@ -216,3 +216,70 @@ def test_allocator_cancel_then_slice_end_path():
         a.release(7)
     pages = a.reserve(owner=8, n_tokens=32)
     assert sorted(pages) == [1, 2, 3, 4]  # free list intact, no duplicates
+
+
+# ---------------------------------------------------------------------------
+# extend / shrink (persistent retention, PR 5)
+# ---------------------------------------------------------------------------
+def test_allocator_extend_grows_in_place():
+    a = PageAllocator(n_pages=8, page_tokens=8)
+    first = a.reserve(owner=1, n_tokens=16)       # 2 pages
+    assert a.extend(owner=1, n_tokens=16) == []   # already covered
+    new = a.extend(owner=1, n_tokens=40)          # grow to 5 pages
+    assert len(new) == 3 and a.pages_of(1) == first + new
+    assert a.free_blocks == 3
+    with pytest.raises(KeyError):
+        a.extend(owner=2, n_tokens=8)             # unknown owner
+    with pytest.raises(MemoryError):
+        a.extend(owner=1, n_tokens=100)           # 13 > 8 pages
+    assert a.pages_of(1) == first + new           # failed extend took nothing
+
+
+def test_allocator_shrink_frees_tail_keeps_prefix():
+    a = PageAllocator(n_pages=8, page_tokens=8)
+    pages = a.reserve(owner=1, n_tokens=48)       # 6 pages
+    assert a.shrink(owner=1, n_tokens=20) == 3    # keep ceil(20/8) = 3
+    assert a.pages_of(1) == pages[:3]             # prefix mapping untouched
+    assert a.free_blocks == 5
+    assert a.shrink(owner=1, n_tokens=24) == 0    # nothing to trim
+    with pytest.raises(KeyError):
+        a.shrink(owner=9, n_tokens=8)
+    assert a.release(1) == 3
+    assert a.free_blocks == 8
+
+
+def test_append_prefill_compact_layout_roundtrip():
+    """append_prefill writes tokens at slot == position and extends the
+    retained prefix without touching it — the host-side twin of the
+    batched prefill_paged path."""
+    from repro.kvcache import append_prefill
+    L, pg, Hkv, D = 2, 4, 1, 8
+    cache = init_paged_kv_cache(L, batch=1, n_pages=4, page_tokens=pg,
+                                max_blocks_per_row=3, n_kv=Hkv, head_dim=D,
+                                dtype=jnp.float32)
+    k1 = jax.random.normal(jax.random.PRNGKey(0), (L, 5, Hkv, D))
+    cache = append_prefill(cache, row=0, page_ids=[2, 3], k=k1, v=k1,
+                           start=0, n_new=5)
+    np.testing.assert_array_equal(np.asarray(cache.block_table[0]), [2, 3, 0])
+    np.testing.assert_array_equal(np.asarray(cache.slot_pos[0, :5]),
+                                  np.arange(5))
+    k2 = jax.random.normal(jax.random.PRNGKey(1), (L, 3, Hkv, D))
+    cache = append_prefill(cache, row=0, page_ids=[2, 3], k=k2, v=k2,
+                           start=5, n_new=3)
+    gk, _ = gather_row(cache, 0)
+    np.testing.assert_allclose(gk[:, :5], np.asarray(k1))   # prefix intact
+    np.testing.assert_allclose(gk[:, 5:8], np.asarray(k2))  # appended
+    assert int(cache.lengths[0]) == 8
+    with pytest.raises(ValueError):
+        append_prefill(cache, 0, [2], k1, k1, start=0, n_new=5)  # overflow
+
+
+def test_batch_views_remap_retained_rows():
+    from repro.kvcache import batch_block_table, batch_slot_pos
+    bt = batch_block_table([[3, 1], [2], []], n_blocks=3)
+    np.testing.assert_array_equal(bt, [[3, 1, 0], [2, 0, 0], [0, 0, 0]])
+    with pytest.raises(ValueError):
+        batch_block_table([[1, 2, 3, 4]], n_blocks=3)
+    sp = batch_slot_pos([5, 0], n_blocks=2, page_tokens=4)
+    np.testing.assert_array_equal(sp[0], [0, 1, 2, 3, 4, -1, -1, -1])
+    assert (sp[1] == -1).all()

@@ -1,0 +1,356 @@
+"""Persistent paged KV storage (kv_retain="request"): prefix pages survive
+across slices, re-prefill becomes a page-table remap — token-exactness vs
+the dense §3.3 re-prefill path, page-lifetime invariants (finish / cancel
+/ evict all return the pool to baseline), and the reprefill_tokens metric.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.kvcache import PageAllocator
+from repro.serving import ServingConfig
+
+
+@pytest.fixture(scope="module")
+def real_env():
+    import jax
+    from repro.configs import get_config
+    from repro.engine.profiler import fit_estimator
+    from repro.models.registry import get_model
+    arch = get_config("llama3.2-1b", reduced=True)
+    model = get_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    est, _, _ = fit_estimator(model, params, batch_sizes=(1, 2),
+                              input_lens=(16, 32), n_decode_iters=2, repeats=1)
+    return arch, model, params, est
+
+
+def _paged_engine(model, params, pool_tokens=512, page_tokens=8):
+    from repro.engine.static_engine import StaticEngine
+    return StaticEngine(model, params, eos_id=1, len_bucket=8,
+                        kv_layout="paged", page_tokens=page_tokens,
+                        kv_pool_tokens=pool_tokens)
+
+
+def _dense_engine(model, params):
+    from repro.engine.static_engine import StaticEngine
+    return StaticEngine(model, params, eos_id=1, len_bucket=8)
+
+
+def _prompts(arch, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, arch.vocab_size, size=s).astype(np.int32)
+            for s in sizes]
+
+
+# ---------------------------------------------------------------------------
+# engine level: the tentpole correctness property
+# ---------------------------------------------------------------------------
+def test_persistent_paged_token_exact_across_slices(real_env):
+    """Serving in >= 3 slices with retained pages (zero re-prefill) yields
+    exactly the dense path's tokens (which re-prefills every slice)."""
+    arch, model, params, est = real_env
+    prompts = _prompts(arch, [7, 12, 4], seed=0)
+    totals = [20, 9, 16]  # 20 tokens at slice 8 -> 3 slices
+    dense = _dense_engine(model, params)
+    paged = _paged_engine(model, params)
+
+    def run(engine, paged_mode):
+        outs = [[] for _ in prompts]
+        n_slices = 0
+        reprefill = 0
+        while any(len(o) < t for o, t in zip(outs, totals)):
+            idx = [i for i in range(len(prompts)) if len(outs[i]) < totals[i]]
+            kw = dict(forced_gen_lens=[totals[i] - len(outs[i]) for i in idx],
+                      already_generated=[outs[i] for i in idx])
+            if paged_mode:
+                res = engine.serve_batch_paged(
+                    [prompts[i] for i in idx], 8, [100 + i for i in idx], **kw)
+            else:
+                res = engine.serve_batch([prompts[i] for i in idx], 8, **kw)
+            reprefill += res.reprefill_tokens
+            n_slices += 1
+            for s, i in enumerate(idx):
+                outs[i].extend(res.results[s]["tokens"])
+        return outs, n_slices, reprefill
+
+    want, k_dense, rep_dense = run(dense, False)
+    got, k_paged, rep_paged = run(paged, True)
+    assert k_dense >= 3 and k_paged >= 3
+    assert got == want
+    assert rep_paged == 0        # resumed slices remap pages, no prefill
+    assert rep_dense > 0         # the dense path pays §3.3 every slice
+    for i in range(len(prompts)):
+        paged.release_request(100 + i)
+    assert paged.allocator.free_blocks == paged.allocator.n_pages
+
+
+def test_persistent_paged_eos_rows_match_dense(real_env):
+    """EOS-driven rows (forced >= sentinel) behave identically on the
+    persistent path, including mid-batch early completion."""
+    from repro.engine.static_engine import EOS_DRIVEN
+    arch, model, params, est = real_env
+    prompts = _prompts(arch, [9, 13], seed=7)
+    dense = _dense_engine(model, params)
+    paged = _paged_engine(model, params)
+    rd = dense.serve_batch(prompts, 6, forced_gen_lens=[3, EOS_DRIVEN])
+    rp = paged.serve_batch_paged(prompts, 6, [1, 2],
+                                 forced_gen_lens=[3, EOS_DRIVEN])
+    for a, b in zip(rd.results, rp.results):
+        assert a["tokens"] == b["tokens"]
+        assert a["n_valid"] == b["n_valid"]
+        assert a["finished"] == b["finished"]
+    assert rd.steps == rp.steps
+
+
+def test_evict_on_pressure_falls_back_to_reprefill(real_env):
+    """A parked resident is evicted LRU when the pool runs dry; its next
+    slice re-prefills classically (counted) and stays token-exact."""
+    arch, model, params, est = real_env
+    p1, p2 = _prompts(arch, [10, 9], seed=1)
+    # 5 pages x 8 tokens: each request needs 3 pages -> the second dispatch
+    # must evict the parked first
+    eng = _paged_engine(model, params, pool_tokens=40, page_tokens=8)
+    dense = _dense_engine(model, params)
+    o1 = list(eng.serve_batch_paged([p1], 8, [1],
+                                    forced_gen_lens=[16]).results[0]["tokens"])
+    o2 = list(eng.serve_batch_paged([p2], 8, [2],
+                                    forced_gen_lens=[16]).results[0]["tokens"])
+    assert eng.n_evictions == 1
+    res = eng.serve_batch_paged([p1], 8, [1], forced_gen_lens=[8],
+                                already_generated=[o1])
+    assert res.reprefill_tokens == len(p1) + len(o1)  # classic §3.3 cost
+    o1 += res.results[0]["tokens"]
+    res = eng.serve_batch_paged([p2], 8, [2], forced_gen_lens=[8],
+                                already_generated=[o2])
+    o2 += res.results[0]["tokens"]
+    assert o1 == dense.serve_batch([p1], 32,
+                                   forced_gen_lens=[16]).results[0]["tokens"]
+    assert o2 == dense.serve_batch([p2], 32,
+                                   forced_gen_lens=[16]).results[0]["tokens"]
+    eng.release_request(1)
+    eng.release_request(2)
+    assert eng.allocator.free_blocks == eng.allocator.n_pages
+
+
+# ---------------------------------------------------------------------------
+# serving stack: kv_retain="request" end to end
+# ---------------------------------------------------------------------------
+def _retain_server(model, params, est, kv_retain, workers=1, max_gen=32,
+                   slice_len=8, page_tokens=16, m_available=64e6):
+    from repro.engine.static_engine import StaticEngine
+    scfg = ServingConfig(strategy="scls", backend="real", kv_layout="paged",
+                         page_tokens=page_tokens, kv_retain=kv_retain,
+                         slice_len=slice_len, max_gen=max_gen, gamma=0.25,
+                         m_available=m_available, mem_bucket=8,
+                         workers=workers)
+    mem = scfg.memory_estimator(model.kv_bytes_per_token())
+    if kv_retain == "request":
+        engines = [StaticEngine(model, params, eos_id=1, len_bucket=8,
+                                kv_layout="paged", page_tokens=page_tokens,
+                                kv_pool_tokens=mem.total_blocks * page_tokens)
+                   for _ in range(workers)]
+    else:
+        engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)
+                   for _ in range(workers)]
+    return scfg.build_real(engines, est, mem)
+
+
+def test_retain_request_zero_reprefill_token_exact(real_env):
+    """Acceptance: with kv_retain="request", uninterrupted requests resume
+    with ZERO re-prefill while streams stay token-exact vs the dense
+    contiguous path, across >= 3 slices."""
+    arch, model, params, est = real_env
+    prompts = _prompts(arch, [12, 20, 7], seed=2)
+    gens = (20, 9, 26)
+    streams = {}
+    for retain in ("slice", "request"):
+        server = _retain_server(model, params, est, retain)
+        baseline = [a.free_blocks for a in server.core.backend.allocators]
+        hs = [server.submit(p, gen_len=g, max_gen=32, arrival=0.2 * i)
+              for i, (p, g) in enumerate(zip(prompts, gens))]
+        m = server.drain()
+        assert all(h.done for h in hs)
+        assert max(h.request.n_schedules for h in hs) >= 3
+        streams[retain] = [h.request.output_tokens for h in hs]
+        # pool back to baseline after every request finished
+        assert [a.free_blocks
+                for a in server.core.backend.allocators] == baseline
+        if retain == "request":
+            assert m.reprefill_tokens == 0
+            assert server.core.mem.retained_blocks == 0
+        else:
+            assert m.reprefill_tokens > 0
+    assert streams["slice"] == streams["request"]
+
+
+def test_retain_request_cancel_mid_flight_returns_pool_to_baseline(real_env):
+    """Cancelling mid-flight releases the retained prefix pages at the
+    slice boundary — allocator free-block count returns to baseline."""
+    arch, model, params, est = real_env
+    server = _retain_server(model, params, est, "request")
+    allocators = server.core.backend.allocators
+    baseline = [a.free_blocks for a in allocators]
+    victim = server.submit(_prompts(arch, [16], seed=3)[0], gen_len=24,
+                           max_gen=32, arrival=0.0)
+    others = [server.submit(p, gen_len=6 + i, max_gen=32, arrival=0.1 * i)
+              for i, p in enumerate(_prompts(arch, [8, 9], seed=4))]
+    while not victim.finished and victim.request.generated == 0:
+        server.step()
+    assert not victim.finished, "victim finished before cancellation"
+    # mid-flight: its prefix pages are retained right now
+    assert any(a.used_blocks > 0 for a in allocators)
+    assert victim.cancel()
+    m = server.drain()
+    assert victim.cancelled and not victim.done
+    assert all(h.done for h in others)
+    assert m.n_completed == 2
+    assert [a.free_blocks for a in allocators] == baseline
+    assert all(not a.owners() for a in allocators)
+    assert server.core.mem.retained_blocks == 0
+
+
+def test_retain_request_eos_finish_releases_pages(real_env):
+    """An EOS-driven request (gen_len=None) releases its retained pages
+    when the model's own EOS ends it."""
+    arch, model, params, est = real_env
+    server = _retain_server(model, params, est, "request", slice_len=4,
+                            max_gen=6)
+    allocators = server.core.backend.allocators
+    baseline = [a.free_blocks for a in allocators]
+    p = _prompts(arch, [10], seed=5)[0]
+    h = server.submit(p, gen_len=None, max_gen=6)
+    req = h.result()
+    server.drain()
+    assert h.done and 1 <= req.generated <= 6
+    assert [a.free_blocks for a in allocators] == baseline
+    assert all(not a.owners() for a in allocators)
+
+
+def test_retain_request_streaming_matches_one_shot(real_env):
+    """Per-slice streamed tokens through the handle equal direct one-shot
+    generation (greedy determinism survives page persistence)."""
+    arch, model, params, est = real_env
+    server = _retain_server(model, params, est, "request")
+    ref_engine = _dense_engine(model, params)
+    p = _prompts(arch, [14], seed=6)[0]
+    h = server.submit(p, gen_len=18, max_gen=32)
+    got = list(itertools.islice(h.tokens(), 18))
+    server.drain()
+    assert h.request.n_schedules >= 3
+    want = ref_engine.serve_batch([p], slice_len=32,
+                                  forced_gen_lens=[18]).results[0]["tokens"]
+    assert got == want
+
+
+def test_unsatisfiable_batch_unwinds_partial_reservations(real_env):
+    """Review regression: when a batch cannot fit even after evicting every
+    parked resident, the rows already granted in that call are unwound —
+    the pool is not wedged and the same rids can be served individually."""
+    arch, model, params, est = real_env
+    p1, p2 = _prompts(arch, [10, 10], seed=8)
+    # 4 pages x 8 tokens: one request needs 3 pages (10 + 8 -> 18 tokens),
+    # two together need 6 — nothing parked to evict, so the dispatch of
+    # [p1, p2] must fail cleanly
+    eng = _paged_engine(model, params, pool_tokens=32, page_tokens=8)
+    with pytest.raises(MemoryError):
+        eng.serve_batch_paged([p1, p2], 8, [1, 2], forced_gen_lens=[4, 4])
+    assert eng.allocator.free_blocks == eng.allocator.n_pages  # unwound
+    assert not eng.allocator.owners()
+    # the pool is usable and rid 1 is servable (no KeyError on re-reserve)
+    res = eng.serve_batch_paged([p1], 8, [1], forced_gen_lens=[4])
+    assert res.results[0]["n_valid"] == 4
+    eng.release_request(1)
+    assert eng.allocator.free_blocks == eng.allocator.n_pages
+
+
+# ---------------------------------------------------------------------------
+# allocator churn property (satellite)
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.sampled_from("RESK"),
+                          st.integers(1, 60)), min_size=1, max_size=40),
+       st.sampled_from([4, 8, 16]))
+def test_reserve_retain_release_churn_never_double_charges(ops, page_tokens):
+    """Property: any interleaving of reserve / extend / shrink / release
+    keeps the pool exactly charged — pages handed out are unique and
+    non-null, used + free always equals the pool size, and releasing all
+    owners restores the free list completely."""
+    a = PageAllocator(n_pages=12, page_tokens=page_tokens)
+    held = {}
+    for owner, op, n_tokens in ops:
+        try:
+            if op == "R":
+                held[owner] = a.reserve(owner, n_tokens)
+            elif op == "E":
+                held[owner].extend(a.extend(owner, n_tokens))
+            elif op == "S":
+                freed = a.shrink(owner, n_tokens)
+                if freed:
+                    del held[owner][-freed:]
+            elif op == "K":
+                a.release(owner)
+                del held[owner]
+        except (KeyError, MemoryError):
+            pass  # rejected ops must leave the pool untouched (checked below)
+        handed = [p for pages in held.values() for p in pages]
+        assert len(handed) == len(set(handed)), "page handed to two owners"
+        assert PageAllocator.NULL_PAGE not in handed
+        assert a.used_blocks == len(handed)
+        assert a.used_blocks + a.free_blocks == 12
+        for owner, pages in held.items():
+            assert a.pages_of(owner) == pages
+    for owner in list(held):
+        a.release(owner)
+    assert a.free_blocks == 12
+
+
+# ---------------------------------------------------------------------------
+# ServingConfig validation (satellite regression)
+# ---------------------------------------------------------------------------
+def test_page_tokens_validation_rejects_bad_values():
+    with pytest.raises(ValueError, match="page_tokens"):
+        ServingConfig(kv_layout="paged", page_tokens=0)
+    with pytest.raises(ValueError, match="integer"):
+        ServingConfig(kv_layout="paged", page_tokens=16.0)
+    with pytest.raises(ValueError, match="integer"):
+        ServingConfig(kv_layout="paged", page_tokens=True)
+    # a block size that yields a zero-block pool is named at config time
+    # instead of failing with an opaque allocator/shape error downstream
+    cfg = ServingConfig(strategy="scls", backend="real", kv_layout="paged",
+                        page_tokens=4096, m_available=1e3)
+    with pytest.raises(ValueError, match="zero-block"):
+        cfg.memory_estimator(delta_bytes=1.0)
+
+
+def test_kv_retain_validation():
+    with pytest.raises(ValueError, match="kv_retain"):
+        ServingConfig(kv_retain="forever")
+    with pytest.raises(ValueError, match="paged"):
+        ServingConfig(backend="real", kv_retain="request")  # dense layout
+    with pytest.raises(ValueError, match="sim"):
+        ServingConfig(backend="sim", kv_layout="paged", kv_retain="request")
+    cfg = ServingConfig(backend="real", kv_layout="paged",
+                        kv_retain="request")
+    assert cfg.kv_retain == "request"
+    cli = ServingConfig.from_cli(
+        ["--backend", "real", "--kv-layout", "paged",
+         "--kv-retain", "request"])
+    assert cli.kv_retain == "request"
+
+
+def test_retain_request_requires_persistent_engines(real_env):
+    """RealBackend refuses kv_retain='request' over dense engines — the
+    retention contract needs engine-owned page pools."""
+    arch, model, params, est = real_env
+    scfg = ServingConfig(strategy="scls", backend="real", kv_layout="paged",
+                         kv_retain="request", m_available=64e6, mem_bucket=8,
+                         workers=1)
+    mem = scfg.memory_estimator(model.kv_bytes_per_token())
+    with pytest.raises(TypeError, match="persistent-paged"):
+        scfg.build_real([_dense_engine(model, params)], est, mem)
