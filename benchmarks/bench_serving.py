@@ -21,7 +21,14 @@ through ``submit`` → admission → pacer → per-slice wakeups):
 Emits ``bench_results/BENCH_serving.json`` (meta + one row per arm) to
 seed the serving perf trajectory, and prints the rows as CSV.
 
-  PYTHONPATH=src python -m benchmarks.bench_serving [--full]
+A third arm runs open-loop load with ``repro.obs`` tracing on and derives
+a **per-phase breakdown** — prefill vs decode vs scheduling gap (worker
+idle time between slice spans) — from the Chrome trace's slice sub-spans,
+emitting ``bench_results/BENCH_obs.json``; ``--trace-out PATH``
+additionally writes the raw trace for Perfetto.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--full] \
+      [--trace-out trace.json]
 """
 from __future__ import annotations
 
@@ -48,10 +55,13 @@ SLO_MS = 60_000.0  # 60 virtual seconds end-to-end, generous at low load
 
 
 def _build(admission_on: bool, time_scale: Optional[float],
-           seed: int) -> AsyncSliceServer:
+           seed: int, trace: bool = False) -> AsyncSliceServer:
     cfg = ServingConfig(strategy="scls", workers=4, slice_len=128,
                         gamma=3.0, noise_sigma=0.02, seed=seed,
-                        time_scale=time_scale)
+                        time_scale=time_scale,
+                        # any non-None value turns the tracer on; the
+                        # export path is chosen by the caller
+                        trace_out="trace.json" if trace else None)
     server = cfg.build_sim().aio
     server.admission = (AdmissionController() if admission_on
                         else NO_ADMISSION)
@@ -112,35 +122,124 @@ async def closed_loop(admission_on: bool, n_clients: int,
     return row
 
 
-async def open_loop(admission_on: bool, rate: float, duration: float,
-                    seed: int = 0) -> Dict:
+async def _drive_open_loop(server: AsyncSliceServer, rate: float,
+                           duration: float, seed: int) -> List:
     """Poisson arrivals at ``rate`` req/s of *virtual* time, paced at
-    TIME_SCALE virtual seconds per wall second."""
-    server = _build(admission_on, time_scale=TIME_SCALE, seed=seed)
+    TIME_SCALE virtual seconds per wall second; returns admitted handles
+    after every one finished."""
     rng = np.random.default_rng(seed + 1)
     n = int(rng.poisson(rate * duration))
     gaps = rng.exponential(1.0 / rate, size=n)
     ins, gens = _sample_lens(rng, n)
     handles: List = []
     waiters: List[asyncio.Task] = []
-
-    async def arrivals() -> None:
-        for k in range(n):
-            await asyncio.sleep(gaps[k] / TIME_SCALE)
-            try:
-                h = server.submit(input_len=int(ins[k]), gen_len=int(gens[k]))
-            except AdmissionRejected:
-                continue
-            handles.append(h)
-            waiters.append(asyncio.ensure_future(h.result()))
-
-    await arrivals()
+    for k in range(n):
+        await asyncio.sleep(gaps[k] / TIME_SCALE)
+        try:
+            h = server.submit(input_len=int(ins[k]), gen_len=int(gens[k]))
+        except AdmissionRejected:
+            continue
+        handles.append(h)
+        waiters.append(asyncio.ensure_future(h.result()))
     if waiters:
         await asyncio.gather(*waiters)
+    return handles
+
+
+async def open_loop(admission_on: bool, rate: float, duration: float,
+                    seed: int = 0) -> Dict:
+    server = _build(admission_on, time_scale=TIME_SCALE, seed=seed)
+    handles = await _drive_open_loop(server, rate, duration, seed)
     row = _row("open_loop_poisson", admission_on, server, handles, duration,
                dict(rate=rate, duration=duration))
     await server.close()
     return row
+
+
+# ---------------------------------------------------------------------------
+# per-phase breakdown from the Chrome trace (repro.obs)
+# ---------------------------------------------------------------------------
+def phase_breakdown(tdict: Dict) -> Dict:
+    """Prefill vs decode vs scheduling gap, read off the trace spans.
+
+    ``prefill_s``/``decode_s`` sum the per-slice sub-spans the backend
+    measured (sim: the latency model's nominal split of the drawn slice
+    time).  ``sched_gap_s`` is worker idle time *inside* each worker's
+    active window — the span between its first dispatch and last
+    completion minus its busy time — i.e. time lost to Γ tick waits and
+    queue starvation, the overhead §3.3 prices against slice length.
+    All values in core (virtual) seconds.
+    """
+    spans = [e for e in tdict["traceEvents"] if e.get("ph") == "X"]
+    slices = [e for e in spans if e["name"] in ("slice", "cont")]
+    prefill_us = sum(e["dur"] for e in spans if e["name"] == "prefill")
+    decode_us = sum(e["dur"] for e in spans if e["name"] == "decode")
+    busy_us = sum(e["dur"] for e in slices)
+    gap_us = 0.0
+    by_worker: Dict[int, List[Dict]] = {}
+    for e in slices:
+        by_worker.setdefault(e["tid"], []).append(e)
+    for evs in by_worker.values():
+        window = (max(e["ts"] + e["dur"] for e in evs)
+                  - min(e["ts"] for e in evs))
+        gap_us += max(window - sum(e["dur"] for e in evs), 0.0)
+    total = max(busy_us + gap_us, 1e-9)
+    return dict(n_slices=len(slices), n_workers=len(by_worker),
+                prefill_s=round(prefill_us / 1e6, 6),
+                decode_s=round(decode_us / 1e6, 6),
+                busy_s=round(busy_us / 1e6, 6),
+                sched_gap_s=round(gap_us / 1e6, 6),
+                prefill_frac=round(prefill_us / total, 4),
+                decode_frac=round(decode_us / total, 4),
+                sched_gap_frac=round(gap_us / total, 4))
+
+
+async def traced_open_loop(rate: float, duration: float, seed: int = 0,
+                           trace_out: Optional[str] = None) -> Dict:
+    """The obs arm: same open-loop load with the full observability stack
+    on (tracer + metrics + audit) — the throughput cost of which is the
+    delta against the untraced open-loop rows."""
+    server = _build(True, time_scale=TIME_SCALE, seed=seed, trace=True)
+    handles = await _drive_open_loop(server, rate, duration, seed)
+    row = _row("open_loop_traced", True, server, handles, duration,
+               dict(rate=rate, duration=duration))
+    obs = server.core.obs
+    phases = phase_breakdown(obs.tracer.to_dict())
+    ins = obs.ins
+    counters = dict(
+        slices_dispatched=int(ins.slices.value()),
+        reprefill_tokens=int(ins.reprefill.value()),
+        trace_events=len(obs.tracer),
+        audit_events=obs.audit.n_recorded)
+    if trace_out:
+        for p in obs.export(trace_out):
+            print(f"[bench_serving] wrote {p}")
+    await server.close()
+    return dict(row=row, phases=phases, counters=counters)
+
+
+def bench_obs(trace_out: Optional[str] = None) -> Dict:
+    rate, duration = (16.0, 120.0) if FULL else (16.0, 45.0)
+    out = asyncio.run(traced_open_loop(rate, duration,
+                                       trace_out=trace_out))
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_obs.json")
+    with open(path, "w") as f:
+        json.dump(dict(meta=dict(strategy="scls", workers=4, slice_len=128,
+                                 rate=rate, duration=duration,
+                                 time_scale=TIME_SCALE, full=FULL),
+                       **out), f, indent=2)
+    print(f"[bench_serving] -> {path}")
+    p = out["phases"]
+    print(f"[bench_serving] phases: prefill {p['prefill_s']:.2f}s "
+          f"({p['prefill_frac']:.0%}) decode {p['decode_s']:.2f}s "
+          f"({p['decode_frac']:.0%}) sched gap {p['sched_gap_s']:.2f}s "
+          f"({p['sched_gap_frac']:.0%}) over {p['n_slices']} slices")
+    assert p["n_slices"] > 0 and p["busy_s"] > 0
+    # the sub-spans partition each slice: prefill + decode == busy
+    assert abs(p["prefill_s"] + p["decode_s"] - p["busy_s"]) \
+        <= 1e-3 * max(p["busy_s"], 1.0)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -185,5 +284,15 @@ def bench_serving() -> List[Dict]:
     return rows
 
 
+def _trace_out_arg() -> Optional[str]:
+    if "--trace-out" not in sys.argv:
+        return None
+    i = sys.argv.index("--trace-out")
+    if i + 1 >= len(sys.argv) or sys.argv[i + 1].startswith("--"):
+        raise SystemExit("--trace-out requires a path argument")
+    return sys.argv[i + 1]
+
+
 if __name__ == "__main__":
     bench_serving()
+    bench_obs(trace_out=_trace_out_arg())

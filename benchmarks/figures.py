@@ -76,6 +76,10 @@ def bench_fig12_throughput() -> List[Dict]:
                                  # replay sheds nothing (0 / 1.0); the
                                  # admission sweep lives in bench_serving
                                  n_rejected=m.n_rejected,
+                                 # per-reason shed counts (repro.obs):
+                                 # Eq. 5–9 memory bound vs SLO deadline
+                                 n_rejected_memory=m.n_rejected_memory,
+                                 n_rejected_deadline=m.n_rejected_deadline,
                                  slo_attainment=round(m.slo_attainment, 4),
                                  # §3.3 rescheduling overhead, now measured
                                  # first-class (sim: analytic dense cost;

@@ -1,0 +1,271 @@
+#!/usr/bin/env python
+"""Observability artifact validator (CI obs-smoke job).
+
+Checks that a ``--trace-out`` Chrome trace-event JSON is structurally
+valid (loadable by Perfetto / chrome://tracing) and that a Prometheus
+text exposition parses with the histogram invariants intact.  Importable
+by ``tests/test_obs.py`` — the CI job and the test suite share one
+definition of "valid".
+
+  PYTHONPATH=src python scripts/validate_obs.py trace.json \
+      [--metrics metrics.txt] [--decisions trace.decisions.json]
+
+Exits non-zero listing every violation found.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+#: event phases the serving tracer emits (subset of the trace-event spec)
+KNOWN_PHASES = {"X", "i", "C", "b", "e", "M"}
+#: first worker-row thread id — mirrors repro.obs.trace.worker_tid(0);
+#: duplicated so this validator runs without PYTHONPATH=src (CI curls and
+#: validates from a bare checkout)
+TID_WORKER_BASE = 100
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event JSON
+# ---------------------------------------------------------------------------
+def validate_trace(trace: dict) -> List[str]:
+    """Structural errors in a trace-event JSON object ([] = valid)."""
+    errors: List[str] = []
+    if not isinstance(trace, dict) or "traceEvents" not in trace:
+        return ["top level must be an object with a 'traceEvents' list"]
+    events = trace["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+    for i, ev in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in KNOWN_PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        for field in ("name", "pid"):
+            if field not in ev:
+                errors.append(f"{where} ({ph}): missing {field!r}")
+        if ph == "M":
+            continue  # metadata has no timestamp
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts) \
+                or ts < 0:
+            errors.append(f"{where} ({ev.get('name')}): bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) \
+                    or not math.isfinite(dur) or dur < 0:
+                errors.append(f"{where} ({ev.get('name')}): "
+                              f"bad dur {dur!r}")
+        if ph == "C":
+            if not isinstance(ev.get("args"), dict) or not ev["args"]:
+                errors.append(f"{where} ({ev.get('name')}): counter "
+                              f"without args")
+        if ph in ("b", "e") and "id" not in ev:
+            errors.append(f"{where} ({ev.get('name')}): async span "
+                          f"without id")
+    # every opened async span must be closed (request lifecycles end at
+    # finalize; an unbalanced trace means a request leaked)
+    opened: Dict[Tuple[str, int], int] = {}
+    for ev in events:
+        if not isinstance(ev, dict) or "id" not in ev:
+            continue
+        key = (ev.get("name"), ev["id"])
+        if ev.get("ph") == "b":
+            opened[key] = opened.get(key, 0) + 1
+        elif ev.get("ph") == "e":
+            opened[key] = opened.get(key, 0) - 1
+    for (name, aid), n in sorted(opened.items()):
+        if n != 0:
+            errors.append(f"async span {name!r} id={aid} "
+                          f"{'never closed' if n > 0 else 'closed twice'}")
+    return errors
+
+
+def trace_slice_log(trace: dict) -> List[list]:
+    """Reconstruct the scheduler dispatch log from a trace's slice spans.
+
+    Returns entries shaped exactly like ``SchedulerCore.batch_log``:
+    ``["static", wid, rids, input_len, slice_len]`` for each ``slice``
+    span and ``["cont", wid, rids]`` for each ``cont`` span, in emission
+    order — what the golden bit-exactness test compares.
+    """
+    out: List[list] = []
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") != "X":
+            continue
+        wid = ev["tid"] - TID_WORKER_BASE
+        a = ev.get("args", {})
+        if ev["name"] == "slice":
+            out.append(["static", wid, list(a["rids"]),
+                        a["input_len"], a["slice_len"]])
+        elif ev["name"] == "cont":
+            out.append(["cont", wid, list(a["rids"])])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition (version 0.0.4)
+# ---------------------------------------------------------------------------
+def parse_prometheus(text: str) -> Dict[str, dict]:
+    """Parse an exposition into ``{sample_name: {"type": ..., "help": ...,
+    "samples": {labelstring: value}}}``; raises ValueError on malformed
+    lines.  Deliberately strict — it guards what real scrapers ingest."""
+    families: Dict[str, dict] = {}
+
+    def family(name: str) -> dict:
+        return families.setdefault(
+            name, {"type": None, "help": None, "samples": {}})
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            _, _, rest = line.partition("# HELP ")
+            name, _, help_text = rest.partition(" ")
+            family(name)["help"] = help_text
+        elif line.startswith("# TYPE "):
+            _, _, rest = line.partition("# TYPE ")
+            name, _, kind = rest.partition(" ")
+            if kind not in ("counter", "gauge", "histogram", "summary",
+                            "untyped"):
+                raise ValueError(f"line {lineno}: bad TYPE {kind!r}")
+            family(name)["type"] = kind
+        elif line.startswith("#"):
+            continue  # other comments are legal
+        else:
+            # <name>{labels} <value>  — labels optional
+            if "{" in line:
+                name, _, rest = line.partition("{")
+                labels, _, value = rest.rpartition("} ")
+                labelstr = "{" + labels + "}"
+            else:
+                name, _, value = line.rpartition(" ")
+                labelstr = ""
+            if not name or not value:
+                raise ValueError(f"line {lineno}: malformed sample "
+                                 f"{line!r}")
+            try:
+                v = float(value)
+            except ValueError:
+                raise ValueError(f"line {lineno}: non-numeric value "
+                                 f"{value!r}") from None
+            # _bucket/_sum/_count samples belong to the histogram family
+            base = name
+            for suffix in ("_bucket", "_sum", "_count"):
+                if name.endswith(suffix) \
+                        and name[:-len(suffix)] in families:
+                    base = name[:-len(suffix)]
+                    break
+            family(base)["samples"][name + labelstr] = v
+    return families
+
+
+def validate_prometheus(text: str) -> List[str]:
+    """Exposition-level errors ([] = valid): parses, every sample has a
+    TYPE, histogram buckets are cumulative and end at le="+Inf" == _count."""
+    try:
+        families = parse_prometheus(text)
+    except ValueError as e:
+        return [str(e)]
+    errors: List[str] = []
+    for name, fam in sorted(families.items()):
+        if fam["type"] is None:
+            errors.append(f"{name}: samples without a # TYPE line")
+            continue
+        if fam["type"] != "histogram":
+            continue
+        # per label-subset: cumulative buckets, +Inf terminal, == _count
+        buckets = [(k, v) for k, v in fam["samples"].items()
+                   if k.startswith(name + "_bucket")]
+        series: Dict[str, List[Tuple[float, float]]] = {}
+        for key, v in buckets:
+            labels = key[len(name + "_bucket"):]
+            le_start = labels.find('le="') + len('le="')
+            le = labels[le_start:labels.find('"', le_start)]
+            rest = labels.replace(f'le="{le}"', "").replace(",}", "}")
+            series.setdefault(rest, []).append(
+                (math.inf if le == "+Inf" else float(le), v))
+        for rest, pts in sorted(series.items()):
+            pts.sort()
+            if not pts or not math.isinf(pts[-1][0]):
+                errors.append(f"{name}{rest}: no le=\"+Inf\" bucket")
+                continue
+            counts = [v for _, v in pts]
+            if any(b > a for a, b in zip(counts[1:], counts)):
+                errors.append(f"{name}{rest}: buckets not cumulative")
+            total_key = name + "_count" + ("" if rest == "{}" else rest)
+            total = fam["samples"].get(total_key)
+            if total is None:
+                errors.append(f"{name}{rest}: missing _count")
+            elif total != counts[-1]:
+                errors.append(f"{name}{rest}: le=\"+Inf\" ({counts[-1]}) "
+                              f"!= _count ({total})")
+            if name + "_sum" + ("" if rest == "{}" else rest) \
+                    not in fam["samples"]:
+                errors.append(f"{name}{rest}: missing _sum")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON (--trace-out)")
+    ap.add_argument("--metrics", help="Prometheus text file (curl /metrics)")
+    ap.add_argument("--decisions", help="decision-audit dump "
+                                        "(trace.decisions.json)")
+    args = ap.parse_args(argv)
+
+    errors: List[str] = []
+    trace = json.loads(pathlib.Path(args.trace).read_text())
+    errors += [f"{args.trace}: {e}" for e in validate_trace(trace)]
+    n_slices = len(trace_slice_log(trace))
+    print(f"[validate_obs] {args.trace}: "
+          f"{len(trace.get('traceEvents', []))} events, "
+          f"{n_slices} dispatch spans")
+    if n_slices == 0:
+        errors.append(f"{args.trace}: no slice/cont dispatch spans — "
+                      f"the run served nothing or tracing was off")
+
+    if args.metrics:
+        text = pathlib.Path(args.metrics).read_text()
+        errors += [f"{args.metrics}: {e}" for e in validate_prometheus(text)]
+        fams = parse_prometheus(text)
+        scls = [n for n in fams if n.startswith("scls_")]
+        print(f"[validate_obs] {args.metrics}: {len(fams)} metric "
+              f"families ({len(scls)} scls_*)")
+        if not scls:
+            errors.append(f"{args.metrics}: no scls_* metric families")
+
+    if args.decisions:
+        events = json.loads(pathlib.Path(args.decisions).read_text())
+        if not isinstance(events, list):
+            errors.append(f"{args.decisions}: top level must be a list")
+        else:
+            bad = [e for e in events
+                   if not isinstance(e, dict)
+                   or not {"seq", "ts", "kind"} <= set(e)]
+            if bad:
+                errors.append(f"{args.decisions}: {len(bad)} events "
+                              f"missing seq/ts/kind")
+            print(f"[validate_obs] {args.decisions}: {len(events)} "
+                  f"decision events")
+
+    for e in errors:
+        print(f"[validate_obs] ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print("[validate_obs] OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

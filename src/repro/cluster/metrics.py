@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -35,6 +35,13 @@ class RunMetrics:
     # submitted every completion trivially attains its (absent) SLO
     n_rejected: int = 0         # shed by admission before any prefill
     slo_attainment: float = 1.0  # completed-with-deadline meeting it
+    # per-reason shed counts (repro.serving.admission reason codes), so
+    # benchmark CSVs report WHY goodput was protected: "memory" = the
+    # prompt cannot fit worker memory even as a batch of one (Eq. 5–9
+    # bound < 1), "deadline" = predicted completion (Eq. 1–4 service +
+    # Eq. 10–11 queue delay) exceeds the request's SLO deadline
+    n_rejected_memory: int = 0
+    n_rejected_deadline: int = 0
     # --- §3.3 rescheduling overhead (persistent paged KV, PR 5) ---
     # tokens prefilled beyond each request's FIRST prefill, summed over the
     # run: the cost slice-level scheduling pays to reschedule.  The
@@ -52,7 +59,9 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
                     batch_sizes: Sequence[int],
                     early_returns: int, total_batches: int,
                     n_rejected: int = 0,
-                    reprefill_tokens: int = 0) -> RunMetrics:
+                    reprefill_tokens: int = 0,
+                    reject_reasons: Optional[Dict[str, int]] = None,
+                    ) -> RunMetrics:
     done = [r for r in requests if r.done and r.finish_time is not None]
     # SLO attainment: of the completed requests that carried a deadline
     # (online submissions with slo_ms), the fraction that met it.  Shed
@@ -95,4 +104,6 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
         n_rejected=int(n_rejected),
         slo_attainment=slo_attainment,
         reprefill_tokens=int(reprefill_tokens),
+        n_rejected_memory=int((reject_reasons or {}).get("memory", 0)),
+        n_rejected_deadline=int((reject_reasons or {}).get("deadline", 0)),
     )

@@ -122,6 +122,25 @@ def bucketed_pred_batch(requests: Sequence[Request], caps: Dict[int, int],
     return batches
 
 
+def batch_audit_fields(b: Batch, mem: MemoryEstimator) -> Dict[str, object]:
+    """Decision-audit record for one Algorithm-1 batch (``repro.obs``).
+
+    Reconstructs the inputs the DP transition saw when it closed this
+    batch: the member rids, the bucketed batch input length, the chosen
+    slice length, the Eq. 1–2 estimated serving time already priced on
+    the batch, and the Eq. 5–9 memory bound ``max_batch_size(L_i, S)``
+    the no-OOM constraint compared ``N`` against.  Pure read — safe to
+    call from observability hooks on a live scheduler.
+    """
+    return dict(
+        rids=sorted(r.rid for r in b.requests),
+        slice_len=int(b.slice_len),
+        input_len=int(b.input_len),
+        est_time=float(b.est_time),
+        mem_bound=int(mem.max_batch_size(int(b.input_len),
+                                         int(b.slice_len))))
+
+
 def fcfs_batch(requests: Sequence[Request], batch_size: int, slice_len: int,
                est: Optional[ServingTimeEstimator] = None) -> List[Batch]:
     """SLS / SO baseline batching: FCFS order, fixed batch size."""

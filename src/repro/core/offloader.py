@@ -19,6 +19,14 @@ class Offloader:
         estimation error never accumulates in the load."""
         self.loads[worker] = max(0.0, self.loads[worker] - est_time)
 
+    def snapshot(self) -> Dict[int, float]:
+        """Copy of the per-worker Eq. 11 loads at this instant.  Both
+        policies charge ``est_time`` per batch in assignment order, so a
+        pre-``assign`` snapshot plus that bookkeeping replays the exact
+        loads each placement decision saw — the decision-audit input
+        (``repro.obs``)."""
+        return dict(self.loads)
+
     def min_load(self) -> float:
         return min(self.loads.values())
 

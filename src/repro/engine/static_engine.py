@@ -347,6 +347,7 @@ class StaticEngine:
         # serve_batch — so retain-mode latency comparisons measure the
         # same quantity and exclude host-side allocator bookkeeping)
         t0 = time.perf_counter()
+        t_prefill = 0.0  # every row resident -> no stage-A device call
         first = np.zeros((B_raw,), np.int32)
         row_len = np.zeros((B_raw,), np.int64)
         reprefill = 0
@@ -371,7 +372,8 @@ class StaticEngine:
             tok0, self._k_pages, self._v_pages = self._prefill_paged(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 self._k_pages, self._v_pages, jnp.asarray(btp))
-            tok0 = np.asarray(tok0)
+            tok0 = np.asarray(tok0)  # host transfer: blocks on stage A
+            t_prefill = time.perf_counter() - t0
             for s, i in enumerate(pre_idx):
                 first[i] = int(tok0[s])
                 row_len[i] = len(eff[i])
@@ -423,7 +425,8 @@ class StaticEngine:
                            batch_input_len=max(L_pre, L_rep),
                            batch_size=B_raw,
                            early_return=steps < slice_len,
-                           reprefill_tokens=reprefill)
+                           reprefill_tokens=reprefill,
+                           prefill_time=t_prefill)
 
     # ------------------------------------------------------------------
     def serve_batch(self, prompts: Sequence[np.ndarray], slice_len: int,
@@ -515,7 +518,8 @@ class StaticEngine:
 class ServeResult:
     def __init__(self, results: List[dict], steps: int, wall_time: float,
                  batch_input_len: int, batch_size: int, early_return: bool,
-                 reprefill_tokens: int = 0):
+                 reprefill_tokens: int = 0,
+                 prefill_time: Optional[float] = None):
         self.results = results
         self.steps = steps
         self.wall_time = wall_time
@@ -526,3 +530,10 @@ class ServeResult:
         #: the paper's §3.3 rescheduling overhead, 0 for resumed residents
         #: on the persistent paged path
         self.reprefill_tokens = reprefill_tokens
+        #: measured wall seconds of the prefill stage, when it runs as a
+        #: separate device call (serve_batch_paged stage A; 0.0 when every
+        #: row resumed resident).  None on the fused dense path, where
+        #: prefill and decode share one jit call and cannot be attributed
+        #: separately.  Feeds the trace's prefill/decode sub-spans
+        #: (repro.obs); never read by the scheduler.
+        self.prefill_time = prefill_time

@@ -8,6 +8,12 @@
   # discrete-event sim backend (no model, CI smoke): same scheduler code
   PYTHONPATH=src python -m repro.launch.serve --backend sim --duration 3
 
+  # observability (repro.obs): record a Perfetto-loadable Chrome trace of
+  # the run (+ the scheduler decision audit next to it); with --http-port,
+  # GET /metrics serves Prometheus text and /debug/decisions the audit
+  PYTHONPATH=src python -m repro.launch.serve --backend sim --duration 3 \
+      --trace-out trace.json
+
   # persistent paged KV storage: prefix pages survive across slices, so a
   # resumed slice re-prefills nothing (metrics: reprefill_tokens == 0 for
   # uninterrupted requests; --kv-retain slice restores §3.3 re-prefill)
@@ -122,6 +128,16 @@ def serve_http(cfg: ServingConfig, server: SliceServer, vocab: int) -> None:
           f"({stats['n_submitted']} submitted, {stats['n_rejected']} "
           f"rejected, {stats['n_degraded']} degraded); "
           f"SLO attainment {m.slo_attainment:.2f}")
+    _export_trace(cfg, server)
+
+
+def _export_trace(cfg: ServingConfig, server: SliceServer) -> None:
+    """--trace-out: write the Chrome trace (+ the decision-audit dump
+    alongside it) after the run."""
+    if cfg.trace_out is None:
+        return
+    for path in server.core.obs.export(cfg.trace_out):
+        print(f"[serve] wrote {path}")
 
 
 def main() -> None:
@@ -160,6 +176,7 @@ def main() -> None:
     live.result()
 
     metrics = server.drain(cfg.duration)
+    _export_trace(cfg, server)
     print(json.dumps(dataclasses.asdict(metrics), indent=2))
     if server.core.predictor is not None:
         print(f"[serve] predictor={server.core.predictor.name} "

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, Any, Optional
 
 import numpy as np
 
@@ -51,6 +51,15 @@ class AdmissionDecision:
     (core-time) completion instant, ``retry_after`` a suggested backoff in
     core seconds for rejected requests, ``max_gen`` the degraded
     generation budget for ``"degrade"`` decisions.
+
+    The decision *inputs* ride along for the observability layer
+    (``repro.obs`` decision audit / per-reason reject metrics):
+    ``reason_code`` is a stable machine key (``"memory"`` — the Eq. 5–9
+    bound admits no batch of one; ``"deadline"`` — the prediction misses
+    the SLO), ``queue_delay`` the Eq. 10–11 predicted queueing delay,
+    ``service_est`` the Eq. 1–4 service-time estimate at ``gen_cap``
+    generated tokens.  All 0/None for accept-all and best-effort paths
+    where they were never computed.
     """
 
     action: str
@@ -58,6 +67,10 @@ class AdmissionDecision:
     predicted_completion: float = 0.0
     retry_after: Optional[float] = None
     max_gen: Optional[int] = None
+    reason_code: Optional[str] = None
+    queue_delay: float = 0.0
+    service_est: float = 0.0
+    gen_cap: Optional[int] = None
 
     @property
     def accept(self) -> bool:
@@ -67,21 +80,24 @@ class AdmissionDecision:
 
     # -- constructors ---------------------------------------------------
     @classmethod
-    def accepted(cls, predicted_completion: float = 0.0) -> "AdmissionDecision":
-        return cls("accept", predicted_completion=predicted_completion)
+    def accepted(cls, predicted_completion: float = 0.0,
+                 **inputs: Any) -> "AdmissionDecision":
+        return cls("accept", predicted_completion=predicted_completion,
+                   **inputs)
 
     @classmethod
     def rejected(cls, reason: str, predicted_completion: float = 0.0,
-                 retry_after: Optional[float] = None) -> "AdmissionDecision":
+                 retry_after: Optional[float] = None,
+                 **inputs: Any) -> "AdmissionDecision":
         return cls("reject", reason=reason,
                    predicted_completion=predicted_completion,
-                   retry_after=retry_after)
+                   retry_after=retry_after, **inputs)
 
     @classmethod
-    def degraded(cls, max_gen: int,
-                 predicted_completion: float = 0.0) -> "AdmissionDecision":
+    def degraded(cls, max_gen: int, predicted_completion: float = 0.0,
+                 **inputs: Any) -> "AdmissionDecision":
         return cls("degrade", max_gen=int(max_gen),
-                   predicted_completion=predicted_completion)
+                   predicted_completion=predicted_completion, **inputs)
 
 
 # ---------------------------------------------------------------------------
@@ -193,17 +209,20 @@ class AdmissionController:
         if core.mem.max_batch_size(int(input_len), first_slice) < 1:
             return AdmissionDecision.rejected(
                 f"prompt of {input_len} tokens does not fit worker memory "
-                f"even as a batch of one")
+                f"even as a batch of one", reason_code="memory")
         if deadline is None:
             return AdmissionDecision.accepted()
 
         queue_delay = predicted_queue_delay(core)
         cap = self.predicted_gen_cap(core, input_len, declared_gen)
         service = predicted_service_time(core, int(input_len), cap)
+        inputs = dict(queue_delay=queue_delay, service_est=service,
+                      gen_cap=cap)
         start = max(float(arrival), core.now)
         completion = start + self.headroom * (queue_delay + service)
         if completion <= deadline:
-            return AdmissionDecision.accepted(predicted_completion=completion)
+            return AdmissionDecision.accepted(predicted_completion=completion,
+                                              **inputs)
 
         if allow_degrade:
             # longest budget that still meets the deadline (monotone in
@@ -221,14 +240,15 @@ class AdmissionController:
                 degraded_completion = start + self.headroom * (
                     queue_delay + predicted_service_time(core, int(input_len), lo))
                 return AdmissionDecision.degraded(
-                    lo, predicted_completion=degraded_completion)
+                    lo, predicted_completion=degraded_completion, **inputs)
 
         return AdmissionDecision.rejected(
             f"predicted completion {completion:.3f}s exceeds deadline "
             f"{deadline:.3f}s (queue delay {queue_delay:.3f}s, "
             f"predicted {cap} tokens)",
             predicted_completion=completion,
-            retry_after=max(queue_delay, completion - deadline))
+            retry_after=max(queue_delay, completion - deadline),
+            reason_code="deadline", **inputs)
 
 
 #: accept-all controller for the no-admission baseline arms

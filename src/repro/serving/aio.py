@@ -234,7 +234,8 @@ class AsyncSliceServer:
     def admission_stats(self) -> dict:
         return dict(n_submitted=self.n_submitted,
                     n_rejected=self.core.n_rejected,
-                    n_degraded=self.n_degraded)
+                    n_degraded=self.n_degraded,
+                    reject_reasons=dict(self.core.reject_reasons))
 
     # ------------------------------------------------------------------
     # submission (synchronous on purpose: one loop, no interleaving
@@ -282,6 +283,14 @@ class AsyncSliceServer:
             allow_degrade=allow_degrade)
         if not decision.accept:
             self.core.n_rejected += 1
+            code = decision.reason_code or "other"
+            self.core.reject_reasons[code] = \
+                self.core.reject_reasons.get(code, 0) + 1
+            if self.core.obs.enabled:
+                # rejects carry rid=None — none was ever assigned
+                self.core.obs.on_admission(
+                    self.core, decision, input_len=input_len,
+                    declared_gen=declared, deadline=deadline_t)
             raise AdmissionRejected(decision)
         if decision.action == "degrade":
             self.n_degraded += 1
@@ -292,6 +301,10 @@ class AsyncSliceServer:
         rid = next(self._next_rid)
         while rid in self.core._by_rid:  # replay() may have taken ids
             rid = next(self._next_rid)
+        if self.core.obs.enabled:
+            self.core.obs.on_admission(
+                self.core, decision, input_len=input_len,
+                declared_gen=declared, deadline=deadline_t, rid=rid)
         req = Request(rid=rid, arrival=arrival_t, input_len=input_len,
                       gen_len=None if gen_len is None else int(gen_len),
                       max_gen=int(max_gen), prompt=prompt,

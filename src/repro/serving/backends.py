@@ -69,6 +69,11 @@ class BatchExecution:
     ``reprefill_tokens`` counts tokens prefilled beyond each member's
     first prefill (the §3.3 rescheduling overhead this slice paid) — 0
     for retained residents on the persistent paged path.
+    ``prefill_dur`` is the prefill portion of ``duration`` when the
+    backend can attribute it (measured wall time on the paged real path,
+    the deterministic model split on sim; ``None`` when the fused dense
+    engine call makes the phases inseparable) — it feeds the trace's
+    prefill/decode sub-spans and is never read by the scheduler.
     """
 
     duration: float
@@ -76,6 +81,7 @@ class BatchExecution:
     early_return: bool
     per_request: List[RequestOutcome]
     reprefill_tokens: int = 0
+    prefill_dur: Optional[float] = None
 
 
 @runtime_checkable
@@ -146,8 +152,18 @@ class SimBackend:
                   prev_tokens: Sequence[Sequence[int]]) -> BatchExecution:
         steps = min(batch.slice_len,
                     max(r.remaining_gen for r in batch.requests))
-        dur = self.true_lat.t_serve(batch.size, batch.input_len,
-                                    steps) * self._noise()
+        t_nominal = self.true_lat.t_serve(batch.size, batch.input_len, steps)
+        dur = t_nominal * self._noise()
+        # prefill share of the slice, for the trace's sub-spans: the
+        # nominal model ratio applied to the single drawn duration.  MUST
+        # NOT cost an extra rng draw — the golden dispatch logs pin the
+        # noise stream, and observability may not perturb it.
+        if t_nominal > 0:
+            frac = self.true_lat.t_prefill(batch.size,
+                                           batch.input_len) / t_nominal
+            prefill_dur = dur * min(max(frac, 0.0), 1.0)
+        else:
+            prefill_dur = 0.0
         per: List[RequestOutcome] = []
         reprefill = 0
         for r in batch.requests:
@@ -164,7 +180,8 @@ class SimBackend:
         return BatchExecution(duration=dur, steps=steps,
                               early_return=steps < batch.slice_len,
                               per_request=per,
-                              reprefill_tokens=reprefill)
+                              reprefill_tokens=reprefill,
+                              prefill_dur=prefill_dur)
 
     def finish_batch(self, wid: int, batch: Batch) -> None:
         pass  # no per-slice resources in virtual time
@@ -303,7 +320,8 @@ class RealBackend:
         return BatchExecution(duration=res.wall_time, steps=res.steps,
                               early_return=res.early_return,
                               per_request=list(res.results),
-                              reprefill_tokens=res.reprefill_tokens)
+                              reprefill_tokens=res.reprefill_tokens,
+                              prefill_dur=res.prefill_time)
 
     def finish_batch(self, wid: int, batch: Batch) -> None:
         if self.kv_retain == "request":
@@ -333,6 +351,21 @@ class RealBackend:
         if self.allocators is None:
             return []
         return [a.free_blocks for a in self.allocators]
+
+    def obs_snapshot(self) -> Dict[str, int]:
+        """KV-pool state for the observability gauges / counter tracks
+        (``repro.obs``); ``{}`` on the dense layout, where there is no
+        page pool to report."""
+        if self.allocators is None:
+            return {}
+        snap = dict(
+            free_pages=sum(a.free_blocks for a in self.allocators),
+            evictions=sum(getattr(e, "n_evictions", 0)
+                          for e in self.engines))
+        if self.kv_retain == "request":
+            snap["retained_blocks"] = sum(a.used_blocks
+                                          for a in self.allocators)
+        return snap
 
     def prefill_time(self, req: Request) -> float:
         raise NotImplementedError(

@@ -27,6 +27,7 @@ from repro.core.memory import (A100_80GB_AVAILABLE, AnalyticMemoryEstimator,
                                LLAMA2_13B_DELTA, MemoryEstimator,
                                PagedMemoryEstimator, RuleBasedMemoryEstimator)
 from repro.core.schedulers import ALL_STRATEGIES, StrategyConfig, make_strategy
+from repro.obs import Observability
 from repro.predict import PREDICTORS
 from repro.serving.backends import RealBackend, SimBackend
 from repro.serving.core import CONTINUOUS_MODES, SchedulerCore
@@ -83,6 +84,12 @@ class ServingConfig:
     http_port: Optional[int] = None      # None = no HTTP endpoint
     slo_ms: Optional[float] = None       # default per-request SLO (admission)
     time_scale: Optional[float] = None   # sim pacing: virtual s per wall s
+    # --- observability (repro.obs) ---
+    # built servers always get a metrics registry (GET /metrics) and a
+    # decision-audit ring (GET /debug/decisions); Chrome tracing turns on
+    # when a --trace-out path is given (launchers export it on shutdown)
+    trace_out: Optional[str] = None      # Perfetto-loadable trace.json path
+    audit_capacity: int = 4096           # decision ring size (0 = no audit)
 
     def __post_init__(self) -> None:
         self.validate()
@@ -166,6 +173,12 @@ class ServingConfig:
                     "time_scale paces virtual time, which only the sim "
                     "backend has; the real backend's engines consume wall "
                     "time already")
+        if self.audit_capacity < 0:
+            raise ValueError(f"audit_capacity must be >= 0 (0 disables "
+                             f"the decision audit), got {self.audit_capacity}")
+        if self.trace_out is not None and not str(self.trace_out).strip():
+            raise ValueError("trace_out must be a non-empty path "
+                             "(or None to disable tracing)")
 
     # ------------------------------------------------------------------
     @classmethod
@@ -228,6 +241,16 @@ class ServingConfig:
                         help="sim-backend pacing: virtual seconds served "
                              "per wall second (1 = real time; default: "
                              "as fast as possible)")
+        ap.add_argument("--trace-out", default=cls.trace_out,
+                        metavar="TRACE_JSON",
+                        help="record a Chrome trace (Perfetto-loadable) of "
+                             "the run and write it here on shutdown; the "
+                             "decision audit is dumped next to it as "
+                             "*.decisions.json")
+        ap.add_argument("--audit-capacity", type=int,
+                        default=cls.audit_capacity,
+                        help="scheduler decision-audit ring size "
+                             "(GET /debug/decisions; 0 disables)")
 
     @classmethod
     def from_cli(cls, argv: Optional[Sequence[str]] = None,
@@ -256,6 +279,14 @@ class ServingConfig:
     # ------------------------------------------------------------------
     # builders
     # ------------------------------------------------------------------
+    def observability(self) -> Observability:
+        """The ``repro.obs`` bundle for built servers: metrics + decision
+        audit always (both are cheap and observation-only — the golden
+        dispatch logs are asserted bit-exact with them on), Chrome tracing
+        only when ``trace_out`` is set."""
+        return Observability.standard(trace=self.trace_out is not None,
+                                      audit_capacity=self.audit_capacity)
+
     def strategy_config(self) -> StrategyConfig:
         return make_strategy(self.strategy, slice_len=self.slice_len,
                              max_gen=self.max_gen,
@@ -324,7 +355,8 @@ class ServingConfig:
         backend = SimBackend(true_lat, noise_sigma=self.noise_sigma,
                              seed=self.seed)
         core = SchedulerCore(self.strategy_config(), backend, self.workers,
-                             sched_est, mem, ils_span=self.ils_span)
+                             sched_est, mem, ils_span=self.ils_span,
+                             obs=self.observability())
         return SliceServer(core, default_slo_ms=self.slo_ms,
                            time_scale=self.time_scale)
 
@@ -336,7 +368,8 @@ class ServingConfig:
                               sched_bucket=sched_est.bucket,
                               kv_retain=self.kv_retain)
         core = SchedulerCore(self.strategy_config(), backend, len(engines),
-                             sched_est, mem, ils_span=self.ils_span)
+                             sched_est, mem, ils_span=self.ils_span,
+                             obs=self.observability())
         return SliceServer(core, default_slo_ms=self.slo_ms)
 
     def build(self, **kwargs: Any) -> SliceServer:

@@ -48,6 +48,7 @@ from repro.core.offloader import (MaxMinOffloader, Offloader,
                                   RoundRobinOffloader)
 from repro.core.request import Batch, Request, bucket_len
 from repro.core.schedulers import StrategyConfig
+from repro.obs import OBS_OFF, Observability
 from repro.predict import LengthPredictor, PredictionPipeline
 from repro.serving.backends import Backend
 
@@ -85,7 +86,8 @@ class SchedulerCore:
                  n_workers: int, sched_est: ServingTimeEstimator,
                  mem: MemoryEstimator,
                  predictor: Optional[LengthPredictor] = None,
-                 ils_span: int = 32):
+                 ils_span: int = 32,
+                 obs: Optional[Observability] = None):
         if (strategy.mode in CONTINUOUS_MODES
                 and not backend.supports_continuous):
             raise ValueError(
@@ -134,6 +136,16 @@ class SchedulerCore:
         #: scheduler (repro.serving.admission); counted here so metrics()
         #: reports them alongside the work that did run
         self.n_rejected = 0
+        #: per-reason-code shed counts (e.g. {"memory": 2, "deadline": 5})
+        self.reject_reasons: Dict[str, int] = {}
+        # observability bundle (repro.obs): tracing + metrics + decision
+        # audit.  Every hook call site guards on ``obs.enabled`` so bare
+        # cores (offline paper replays, the goldens) pay one attribute
+        # read per hook point; hooks are observation-only by contract —
+        # the golden dispatch logs stay bit-exact with obs fully on.
+        self.obs = obs if obs is not None else OBS_OFF
+        if self.obs.enabled:
+            self.obs.attach(self)
         # --- accounting (paper figure columns) ---
         self.batch_sizes: List[int] = []
         self.early_returns = 0
@@ -273,6 +285,8 @@ class SchedulerCore:
         # the one place every terminal path goes through
         self.backend.finish_request(r)
         self._finalized.add(r.rid)
+        if self.obs.enabled:
+            self.obs.on_finalize(self, r, completed)
         self._notify("final", r)
 
     # ------------------------------------------------------------------
@@ -296,7 +310,8 @@ class SchedulerCore:
                                wct, self.batch_sizes, self.early_returns,
                                self.total_batches,
                                n_rejected=self.n_rejected,
-                               reprefill_tokens=self.reprefill_tokens)
+                               reprefill_tokens=self.reprefill_tokens,
+                               reject_reasons=self.reject_reasons)
 
     # ------------------------------------------------------------------
     # event handlers
@@ -306,6 +321,8 @@ class SchedulerCore:
             if req.rid not in self._finalized:
                 self._finalize(req, completed=False)
             return
+        if self.obs.enabled:
+            self.obs.on_arrival(self, req)
         if self.s.mode in CENTRAL_MODES:
             self.pool.append(req)
         elif self.s.mode == "perreq":
@@ -341,7 +358,7 @@ class SchedulerCore:
                 singles.append(Batch(requests=[r], input_len=L,
                                      slice_len=self.s.slice_len,
                                      est_time=marginal))
-            for w, b in self.offloader.assign(singles):
+            for w, b in self._assign(singles):
                 wk = self.workers[w]
                 wk.pending.append(b.requests[0])
                 if not wk.busy:
@@ -350,7 +367,7 @@ class SchedulerCore:
             # SCLS-PRED / ORACLE: calibrated predicted remaining-length
             # caps pick the buckets and per-batch slice lengths
             batches = self.pred.batches(reqs, self.est, self.mem)
-            for w, b in self.offloader.assign(batches):
+            for w, b in self._assign(batches):
                 wk = self.workers[w]
                 wk.queue.append(b)
                 if not wk.busy:
@@ -359,7 +376,7 @@ class SchedulerCore:
             cap = self.s.dp_cap if self.s.dp_cap else None
             batches = dp_batch(reqs, self.s.slice_len, self.est, self.mem,
                                max_batch_size=cap)
-            for w, b in self.offloader.assign(batches):
+            for w, b in self._assign(batches):
                 wk = self.workers[w]
                 wk.queue.append(b)
                 if not wk.busy:
@@ -371,6 +388,18 @@ class SchedulerCore:
             dt = self.s.gamma
         if self._more_work_expected():
             self._push_tick(self.now + dt)
+
+    def _assign(self, batches: List[Batch]) -> List[Tuple[int, Batch]]:
+        """Offloader placement with decision audit: the pre-assignment
+        load snapshot plus the offloader's documented ``loads[w] +=
+        est_time`` bookkeeping reconstruct the exact Eq. 11 loads each
+        placement saw (``Observability.on_schedule``)."""
+        if not self.obs.enabled:
+            return self.offloader.assign(batches)
+        loads_before = self.offloader.snapshot()
+        assignments = self.offloader.assign(batches)
+        self.obs.on_schedule(self, assignments, loads_before)
+        return assignments
 
     def _more_work_expected(self) -> bool:
         if self.pool:
@@ -409,6 +438,8 @@ class SchedulerCore:
         prev = [self.token_log.get(r.rid, []) for r in b.requests]
         ex = self.backend.run_batch(w.wid, b, prev)
         w.busy = True
+        if self.obs.enabled:
+            self.obs.on_dispatch(self, w.wid, b, ex.duration, ex.prefill_dur)
         self._push(self.now + ex.duration, "batch_done", (w.wid, b, ex))
 
     def _on_batch_done(self, payload: Tuple[int, Batch, object]) -> None:
@@ -463,6 +494,8 @@ class SchedulerCore:
                     tgt.pending.append(r)
                     if not tgt.busy:
                         self._start_static_fcfs(tgt)
+        if self.obs.enabled:
+            self.obs.on_slice_done(self, wid, b, ex.reprefill_tokens)
         if self.s.mode == "perreq" and w.pending and not w.busy:
             self._start_static_fcfs(w)
         elif w.queue:
@@ -541,6 +574,9 @@ class SchedulerCore:
         dur += self.backend.span_time(avg_len, span, N)
         self.batch_log.append(
             [_LOG_CONT, w.wid, sorted(e[0].rid for e in w.running)])
+        if self.obs.enabled:
+            self.obs.on_cont_dispatch(self, w.wid,
+                                      [e[0].rid for e in w.running], dur)
         self._push(self.now + dur, "cont_done", (w.wid, span, N))
 
     def _on_cont_done(self, payload: Tuple[int, int, int]) -> None:
@@ -577,4 +613,6 @@ class SchedulerCore:
         w.running = still
         if expired:
             self.pool.extend(expired)
+        if self.obs.enabled:
+            self.obs.on_cont_done(self, wid)
         self._continuous_step(w)

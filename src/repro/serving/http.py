@@ -11,9 +11,19 @@ asyncio loop on the scheduling side) — no new dependencies:
     completed slice** — the slice is the scheduling atom, so chunk
     boundaries are exactly the moments tokens actually materialize.
   * ``GET /healthz`` — liveness + a scheduler snapshot (strategy, worker
-    count, in-flight requests, free KV blocks on a paged real backend).
-  * ``GET /metrics`` — the full :class:`RunMetrics` row so far plus the
-    admission counters.
+    count, in-flight requests, live queue depth and in-flight slice
+    count from the observability gauges, free KV blocks on a paged real
+    backend).
+  * ``GET /metrics`` — Prometheus text exposition from the
+    ``repro.obs`` registry (counters/gauges/histograms; see
+    ``docs/observability.md``); falls back to the legacy JSON dump when
+    the server was built without a metrics registry.
+  * ``GET /metrics.json`` — the legacy one-shot JSON dump (the full
+    :class:`RunMetrics` row so far plus the admission counters).
+  * ``GET /debug/decisions?rid=&kind=&n=`` — the scheduler decision
+    audit ring (admission verdicts with their Eq. 1–2/10–11 inputs,
+    ``dp_batch`` compositions, offloader placements with decision-time
+    Eq. 11 loads).
   * Admission rejections map to **429** with a ``Retry-After`` header
     derived from the predicted queue delay (converted to wall seconds
     when the server is paced).
@@ -38,6 +48,7 @@ import json
 import math
 import threading
 import time
+import urllib.parse
 import zlib
 from concurrent.futures import TimeoutError as FuturesTimeout
 from dataclasses import asdict
@@ -204,6 +215,17 @@ class HTTPFrontend:
                     backend=type(core.backend).__name__,
                     now=core.now, in_flight=in_flight,
                     **self.aserver.admission_stats)
+        # live load signals, sourced from the same gauges the registry
+        # exports at /metrics (the fleet-router placement inputs); fall
+        # back to reading the scheduler directly when obs is off
+        if core.obs.ins is not None:
+            snap["queue_depth"] = int(core.obs.ins.queue_depth.value())
+            snap["in_flight_slices"] = int(core.obs.ins.in_flight.value())
+        else:
+            snap["queue_depth"] = len(core.pool) + sum(
+                len(w.pending) + sum(b.size for b in w.queue)
+                for w in core.workers)
+            snap["in_flight_slices"] = sum(1 for w in core.workers if w.busy)
         if isinstance(core.backend, RealBackend) \
                 and core.backend.allocators is not None:
             snap["free_blocks"] = core.backend.free_blocks()
@@ -219,6 +241,21 @@ class HTTPFrontend:
         m = asdict(self.aserver.metrics())
         m.update(self.aserver.admission_stats)
         return m
+
+    async def _metrics_text(self) -> Optional[str]:
+        """Prometheus text exposition, or None when the server was built
+        without a metrics registry (legacy JSON keeps serving /metrics)."""
+        registry = self.aserver.core.obs.registry
+        return None if registry is None else registry.render()
+
+    async def _decisions(self, rid: Optional[int], kind: Optional[str],
+                         limit: Optional[int]) -> Dict[str, Any]:
+        audit = self.aserver.core.obs.audit
+        if audit is None:
+            return dict(enabled=False, events=[])
+        events = audit.query(rid=rid, kind=kind, limit=limit)
+        return dict(enabled=True, n_recorded=audit.n_recorded,
+                    capacity=audit.capacity, events=events)
 
     # ------------------------------------------------------------------
     # request parsing / response shaping
@@ -321,13 +358,46 @@ class HTTPFrontend:
                     raise _BadRequest("request body must be a JSON object")
                 return body
 
+            def _text(self, code: int, body: str, content_type: str) -> None:
+                payload = body.encode()
+                self.send_response(code)
+                self.send_header("Content-Type", content_type)
+                self.send_header("Content-Length", str(len(payload)))
+                self.end_headers()
+                self.wfile.write(payload)
+
+            def _query_params(self) -> Dict[str, str]:
+                parts = self.path.split("?", 1)
+                if len(parts) == 1:
+                    return {}
+                return {k: v[-1] for k, v in
+                        urllib.parse.parse_qs(parts[1]).items()}
+
             # -- routes -------------------------------------------------
             def do_GET(self) -> None:  # noqa: N802 — http.server API
                 path = self.path.split("?", 1)[0]
                 if path == "/healthz":
                     self._json(200, front._call(front._snapshot()))
                 elif path == "/metrics":
+                    text = front._call(front._metrics_text())
+                    if text is None:  # no registry: legacy JSON dump
+                        self._json(200, front._call(front._metrics()))
+                    else:
+                        self._text(200, text,
+                                   "text/plain; version=0.0.4; charset=utf-8")
+                elif path == "/metrics.json":
                     self._json(200, front._call(front._metrics()))
+                elif path == "/debug/decisions":
+                    q = self._query_params()
+                    try:
+                        rid = int(q["rid"]) if "rid" in q else None
+                        limit = int(q["n"]) if "n" in q else None
+                    except ValueError:
+                        self._error(400, "rid and n must be integers",
+                                    "invalid_request_error")
+                        return
+                    self._json(200, front._call(
+                        front._decisions(rid, q.get("kind"), limit)))
                 elif path == "/v1/models":
                     self._json(200, {"object": "list", "data": [
                         {"id": front.model_name, "object": "model",

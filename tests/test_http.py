@@ -39,6 +39,10 @@ def test_healthz_and_models(frontend):
     snap = json.loads(raw)
     assert snap["status"] == "ok" and snap["strategy"] == "SCLS"
     assert snap["backend"] == "SimBackend" and snap["workers"] == 2
+    # live load signals from the repro.obs gauges (fleet-router inputs)
+    assert isinstance(snap["queue_depth"], int) and snap["queue_depth"] >= 0
+    assert isinstance(snap["in_flight_slices"], int)
+    assert 0 <= snap["in_flight_slices"] <= snap["workers"]
     resp, raw = _request(frontend, "GET", "/v1/models")
     assert resp.status == 200
     assert json.loads(raw)["data"][0]["id"] == "scls-sim"
@@ -98,8 +102,10 @@ def test_unmeetable_slo_rejected_with_429_before_any_work(frontend):
     # nothing entered the scheduler
     assert len(core.requests) == n_requests_before
     assert len(core.batch_log) == batches_before
-    resp, raw = _request(frontend, "GET", "/metrics")
-    assert json.loads(raw)["n_rejected"] >= 1
+    resp, raw = _request(frontend, "GET", "/metrics.json")
+    m = json.loads(raw)
+    assert m["n_rejected"] >= 1
+    assert m["reject_reasons"].get("deadline", 0) >= 1  # per-reason counts
 
 
 def test_meetable_slo_accepted(frontend):
@@ -125,15 +131,72 @@ def test_bad_requests_get_400_not_500(frontend):
     assert resp.status == 404
 
 
-def test_metrics_endpoint_reports_run_metrics(frontend):
-    resp, raw = _request(frontend, "GET", "/metrics")
+def test_metrics_json_endpoint_reports_run_metrics(frontend):
+    resp, raw = _request(frontend, "GET", "/metrics.json")
     assert resp.status == 200
     m = json.loads(raw)
     for key in ("n_completed", "throughput", "ttft_mean", "p99_response",
                 "slo_attainment", "n_rejected", "n_submitted",
-                "reprefill_tokens"):  # §3.3 overhead, first-class (PR 5)
+                "reprefill_tokens",   # §3.3 overhead, first-class (PR 5)
+                "n_rejected_memory", "n_rejected_deadline"):  # repro.obs
         assert key in m
     assert m["n_completed"] >= 1
+
+
+def test_metrics_endpoint_serves_prometheus_text(frontend):
+    """/metrics is the Prometheus exposition now (scrape-ready); the
+    legacy JSON dump moved to /metrics.json."""
+    resp, raw = _request(frontend, "GET", "/metrics")
+    assert resp.status == 200
+    assert resp.getheader("Content-Type").startswith("text/plain")
+    assert "version=0.0.4" in resp.getheader("Content-Type")
+    text = raw.decode()
+    assert _validate_obs().validate_prometheus(text) == []
+    fams = _validate_obs().parse_prometheus(text)
+    # the serving instruments observed the traffic earlier tests drove
+    assert fams["scls_slices_dispatched_total"]["samples"][
+        "scls_slices_dispatched_total"] >= 1
+    assert fams["scls_requests_total"]["type"] == "counter"
+    assert any(k.startswith("scls_ttft_seconds_bucket")
+               for k in fams["scls_ttft_seconds"]["samples"])
+    # per-verdict admission counts (the 429 test rejected one)
+    assert fams["scls_admission_total"]["samples"][
+        'scls_admission_total{action="reject",reason="deadline"}'] >= 1
+
+
+def test_debug_decisions_endpoint(frontend):
+    resp, raw = _request(frontend, "GET", "/debug/decisions")
+    assert resp.status == 200
+    out = json.loads(raw)
+    assert out["enabled"] and out["n_recorded"] >= 1
+    kinds = {e["kind"] for e in out["events"]}
+    assert kinds <= {"admission", "batch", "offload"}
+    assert {"batch", "offload"} <= kinds  # traffic was dispatched above
+    # kind + limit filters
+    resp, raw = _request(frontend, "GET", "/debug/decisions?kind=batch&n=2")
+    batches = json.loads(raw)["events"]
+    assert len(batches) <= 2
+    assert all(e["kind"] == "batch" for e in batches)
+    # rid filter returns only that request's decisions
+    rid = batches[-1]["rids"][0]
+    resp, raw = _request(frontend, "GET", f"/debug/decisions?rid={rid}")
+    mine = json.loads(raw)["events"]
+    assert mine and all(e.get("rid") == rid or rid in e.get("rids", [])
+                        for e in mine)
+    # malformed query ints are a 400, not a 500
+    resp, _ = _request(frontend, "GET", "/debug/decisions?rid=abc")
+    assert resp.status == 400
+
+
+def _validate_obs():
+    import importlib.util
+    import pathlib
+    spec = importlib.util.spec_from_file_location(
+        "validate_obs_http",
+        pathlib.Path(__file__).parent.parent / "scripts" / "validate_obs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def test_encode_prompt_shapes():
