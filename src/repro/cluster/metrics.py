@@ -49,6 +49,13 @@ class RunMetrics:
     # requests (prefix pages survive, re-prefill becomes a page-table
     # remap); the sim backend reports the analytic dense cost.
     reprefill_tokens: int = 0
+    # --- cross-request prefix sharing (COW paged KV, PR 7) ---
+    # prompt tokens satisfied by a refcounted prefix-page join instead of
+    # prefill (multi-turn sessions, shared system prompts), and the pages
+    # those joins took references on.  0 everywhere except the real
+    # kv_retain="request" backend with prefix sharing enabled.
+    prefix_hit_tokens: int = 0
+    shared_blocks: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -61,6 +68,8 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
                     n_rejected: int = 0,
                     reprefill_tokens: int = 0,
                     reject_reasons: Optional[Dict[str, int]] = None,
+                    prefix_hit_tokens: int = 0,
+                    shared_blocks: int = 0,
                     ) -> RunMetrics:
     done = [r for r in requests if r.done and r.finish_time is not None]
     # SLO attainment: of the completed requests that carried a deadline
@@ -106,4 +115,6 @@ def compute_metrics(name: str, requests: Sequence[Request], duration: float,
         reprefill_tokens=int(reprefill_tokens),
         n_rejected_memory=int((reject_reasons or {}).get("memory", 0)),
         n_rejected_deadline=int((reject_reasons or {}).get("deadline", 0)),
+        prefix_hit_tokens=int(prefix_hit_tokens),
+        shared_blocks=int(shared_blocks),
     )

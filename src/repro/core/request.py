@@ -32,6 +32,11 @@ class Request:
     #: Schedulers never read it — it exists for admission decisions (made
     #: before submission) and the SLO-attainment metric.
     deadline: Optional[float] = None
+    #: multi-turn session this request is a turn of (``repro.serving``
+    #: ``Session`` / HTTP chat): on completion the real retain-mode
+    #: backend anchors its prefix pages for the next turn's prefix join
+    #: instead of freeing them.  Schedulers never read it.
+    session_id: Optional[int] = None
 
     # --- scheduling state ---
     generated: int = 0

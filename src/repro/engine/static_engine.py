@@ -77,7 +77,8 @@ class StaticEngine:
                  pad_id: int = 0, len_bucket: int = 16,
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None,
                  kv_layout: str = "dense", page_tokens: int = 16,
-                 kv_pool_tokens: Optional[int] = None):
+                 kv_pool_tokens: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.model = model
         self.params = params
         self.eos_id = eos_id
@@ -90,8 +91,9 @@ class StaticEngine:
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.kv_layout = kv_layout
         self.allocator = None
+        self.prefix_sharing = prefix_sharing and kv_layout == "paged"
         if kv_layout == "paged":
-            from repro.kvcache import PageAllocator  # deferred import cycle
+            from repro.kvcache import PageAllocator, PrefixIndex  # deferred import cycle
             cfg = model.cfg
             if cfg.family != "dense":
                 raise ValueError("persistent paged StaticEngine: dense "
@@ -114,6 +116,7 @@ class StaticEngine:
             self._k_pages = jnp.zeros(shape, cfg.dtype)
             self._v_pages = jnp.zeros(shape, cfg.dtype)
             self._resident: Dict[int, _Resident] = {}
+            self._prefix = PrefixIndex(page_tokens)
             self._stamp = 0
             self.n_evictions = 0
             from repro.models import transformer as _tfm
@@ -129,6 +132,16 @@ class StaticEngine:
                                                    lengths, cache)
                 return greedy(logits), cache.k_pages, cache.v_pages
 
+            def _prefill_tail(params, tokens, start, lengths, k_pages,
+                              v_pages, block_table):
+                W = block_table.shape[1] * page_tokens
+                cache = _PKV(k_pages, v_pages, block_table,
+                             jnp.full((tokens.shape[0], W), -1, jnp.int32),
+                             jnp.zeros((tokens.shape[0],), jnp.int32))
+                logits, cache = _tfm.prefill_tail_paged(params, cfg, tokens,
+                                                        start, lengths, cache)
+                return greedy(logits), cache.k_pages, cache.v_pages
+
             # donate the pool buffers so XLA updates them in place (the
             # pool is sized to most of HBM; without donation every call
             # would hold two full copies).  CPU ignores donation and
@@ -136,6 +149,9 @@ class StaticEngine:
             donate = (() if jax.default_backend() == "cpu" else (3, 4))
             self._prefill_paged = jax.jit(_prefill_paged,
                                           donate_argnums=donate)
+            donate_t = (() if jax.default_backend() == "cpu" else (4, 5))
+            self._prefill_tail_paged = jax.jit(_prefill_tail,
+                                               donate_argnums=donate_t)
 
     # ------------------------------------------------------------------
     def _serve_fn(self, slice_len: int):
@@ -232,6 +248,7 @@ class StaticEngine:
         """Drop a request's retained pages — its next dispatch falls back
         to the classic §3.3 re-prefill (memory safety over retention)."""
         self._resident.pop(rid, None)
+        self._prefix.remove(rid)
         self.allocator.release(rid, missing_ok=True)
         self.n_evictions += 1
 
@@ -241,12 +258,26 @@ class StaticEngine:
                    if rid not in protected]
         return min(victims)[1] if victims else None
 
+    def _extend_evicting(self, rid: int, need: int, protected) -> None:
+        """``allocator.extend`` with the LRU evict-on-pressure loop;
+        re-raises ``MemoryError`` when no parked victim remains."""
+        while True:
+            try:
+                self.allocator.extend(rid, need)
+                return
+            except MemoryError:
+                victim = self._lru_parked(protected)
+                if victim is None:
+                    raise
+                self._evict(victim)
+
     def release_request(self, rid: int) -> int:
         """Free a request's retained pages (finish / cancel / migration);
         an explicit no-op for unknown rids.  Returns pages freed."""
         if self.kv_layout != "paged":
             return 0
         self._resident.pop(rid, None)
+        self._prefix.remove(rid)
         return self.allocator.release(rid, missing_ok=True)
 
     @property
@@ -310,6 +341,8 @@ class StaticEngine:
         is_resident = []
         fresh: List[int] = []               # reserved this call, no residency
         grown: List[Tuple[int, int]] = []   # (rid, resident tokens before)
+        shared_start: Dict[int, int] = {}   # row index -> shared prefix tokens
+        shared_blocks = 0
         try:
             for i, rid in enumerate(rids):
                 res = self._resident.get(rid)
@@ -318,21 +351,41 @@ class StaticEngine:
                     # fall back to a fresh prefill rather than serve bad KV
                     self._evict(rid)
                     res = None
+                hit_pages: List[int] = []
+                if res is None and self.prefix_sharing:
+                    # cross-request prefix join: take references on another
+                    # resident's full pages matching this prompt's head and
+                    # prefill only the novel tail.  At least one tail token
+                    # must remain to produce the next-token logits.
+                    hit_pages, _ = self._prefix.lookup(eff[i])
+                    n_hit = min(len(hit_pages), (len(eff[i]) - 1) // pg)
+                    hit_pages = hit_pages[:n_hit]
                 need = (res.n_tokens if res else len(eff[i])) + slice_len
-                while True:
-                    try:
-                        if res is not None:
-                            if self.allocator.extend(rid, need):
-                                grown.append((rid, res.n_tokens))
-                        else:
-                            self.allocator.reserve(rid, need)
-                            fresh.append(rid)
-                        break
-                    except MemoryError:
-                        victim = self._lru_parked(batch_set)
-                        if victim is None:
-                            raise
-                        self._evict(victim)
+                if res is None and hit_pages:
+                    # share never allocates; the tail extension does, with
+                    # its own evict-on-pressure loop.  On MemoryError the
+                    # rid is already in ``fresh`` so the outer unwind drops
+                    # its shared references too.
+                    self.allocator.share(rid, hit_pages)
+                    fresh.append(rid)
+                    self._extend_evicting(rid, need, batch_set)
+                    shared_start[i] = len(hit_pages) * pg
+                    shared_blocks += len(hit_pages)
+                else:
+                    while True:
+                        try:
+                            if res is not None:
+                                if self.allocator.extend(rid, need):
+                                    grown.append((rid, res.n_tokens))
+                            else:
+                                self.allocator.reserve(rid, need)
+                                fresh.append(rid)
+                            break
+                        except MemoryError:
+                            victim = self._lru_parked(batch_set)
+                            if victim is None:
+                                raise
+                            self._evict(victim)
                 is_resident.append(res is not None)
         except MemoryError:
             for rid in fresh:
@@ -350,8 +403,12 @@ class StaticEngine:
         t_prefill = 0.0  # every row resident -> no stage-A device call
         first = np.zeros((B_raw,), np.int32)
         row_len = np.zeros((B_raw,), np.int64)
+        pads = [0] * B_raw
         reprefill = 0
-        pre_idx = [i for i in range(B_raw) if not is_resident[i]]
+        prefix_hit = sum(shared_start.values())
+        pre_idx = [i for i in range(B_raw)
+                   if not is_resident[i] and i not in shared_start]
+        tail_idx = sorted(shared_start)
         L_pre = 0
         if pre_idx:
             max_eff = max(len(eff[i]) for i in pre_idx)
@@ -373,10 +430,43 @@ class StaticEngine:
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 self._k_pages, self._v_pages, jnp.asarray(btp))
             tok0 = np.asarray(tok0)  # host transfer: blocks on stage A
-            t_prefill = time.perf_counter() - t0
             for s, i in enumerate(pre_idx):
                 first[i] = int(tok0[s])
                 row_len[i] = len(eff[i])
+                pads[i] = L_pre - len(eff[i])
+        # --- stage A': tail-only prefill of the prefix-sharing rows — the
+        # shared head is a page-table remap, only the novel tail runs
+        if tail_idx:
+            max_tail = max(len(eff[i]) - shared_start[i] for i in tail_idx)
+            T_t = bucket_len(max_tail, self.len_bucket)
+            Bt = _pow2_bucket(len(tail_idx))
+            toks_t = np.full((Bt, T_t), self.pad_id, np.int32)
+            start_t = np.zeros((Bt,), np.int32)
+            lens_t = np.zeros((Bt,), np.int32)
+            nb_t = bucket_len(
+                max(len(self.allocator.pages_of(rids[i])) for i in tail_idx),
+                NB_BUCKET)
+            btt = np.zeros((Bt, nb_t), np.int32)
+            for s, i in enumerate(tail_idx):
+                e, st = eff[i], shared_start[i]
+                toks_t[s, T_t - (len(e) - st):] = e[st:]
+                start_t[s] = st
+                lens_t[s] = len(e)
+                pages = self.allocator.pages_of(rids[i])
+                btt[s, :min(len(pages), nb_t)] = pages[:nb_t]
+                if prevs[i]:  # only the tail re-runs on a reschedule
+                    reprefill += len(e) - st
+            tokt, self._k_pages, self._v_pages = self._prefill_tail_paged(
+                self.params, jnp.asarray(toks_t), jnp.asarray(start_t),
+                jnp.asarray(lens_t), self._k_pages, self._v_pages,
+                jnp.asarray(btt))
+            tokt = np.asarray(tokt)  # host transfer: blocks on stage A'
+            for s, i in enumerate(tail_idx):
+                first[i] = int(tokt[s])
+                row_len[i] = len(eff[i])
+                pads[i] = T_t - (len(eff[i]) - shared_start[i])
+        if pre_idx or tail_idx:
+            t_prefill = time.perf_counter() - t0
         for i, rid in enumerate(rids):
             if is_resident[i]:
                 res = self._resident[rid]
@@ -410,23 +500,30 @@ class StaticEngine:
 
         # --- retention: trim every row to its resident tokens; pages are
         # freed only via release_request (finish/cancel) or eviction
-        results = self._assemble_results(
-            out, steps, done, forced_gen_lens,
-            [(L_pre - len(eff[i])) if not is_resident[i] else 0
-             for i in range(B_raw)])
+        results = self._assemble_results(out, steps, done, forced_gen_lens,
+                                         pads)
         for i, rid in enumerate(rids):
             new_len = int(row_len[i]) + steps
             self._stamp += 1
             self._resident[rid] = _Resident(new_len, int(nxt[i]),
                                             self._stamp)
             self.allocator.shrink(rid, new_len)
+            if self.prefix_sharing:
+                # index the row's full pages for future prefix joins; the
+                # resident stream is prompt+generated so far followed by
+                # every token this slice fed the decoder (out rows)
+                stream = np.concatenate([eff[i], out[i, :steps]])
+                self._prefix.insert(rid, stream,
+                                    self.allocator.pages_of(rid))
         L_rep = bucket_len(int(max(row_len)), self.len_bucket)
         return ServeResult(results=results, steps=steps, wall_time=wall,
                            batch_input_len=max(L_pre, L_rep),
                            batch_size=B_raw,
                            early_return=steps < slice_len,
                            reprefill_tokens=reprefill,
-                           prefill_time=t_prefill)
+                           prefill_time=t_prefill,
+                           prefix_hit_tokens=prefix_hit,
+                           shared_blocks=shared_blocks)
 
     # ------------------------------------------------------------------
     def serve_batch(self, prompts: Sequence[np.ndarray], slice_len: int,
@@ -519,7 +616,8 @@ class ServeResult:
     def __init__(self, results: List[dict], steps: int, wall_time: float,
                  batch_input_len: int, batch_size: int, early_return: bool,
                  reprefill_tokens: int = 0,
-                 prefill_time: Optional[float] = None):
+                 prefill_time: Optional[float] = None,
+                 prefix_hit_tokens: int = 0, shared_blocks: int = 0):
         self.results = results
         self.steps = steps
         self.wall_time = wall_time
@@ -537,3 +635,8 @@ class ServeResult:
         #: separately.  Feeds the trace's prefill/decode sub-spans
         #: (repro.obs); never read by the scheduler.
         self.prefill_time = prefill_time
+        #: prompt tokens satisfied by a cross-request prefix-page join
+        #: this call (their prefill became a page-table remap), and the
+        #: number of pages those joins took references on
+        self.prefix_hit_tokens = prefix_hit_tokens
+        self.shared_blocks = shared_blocks

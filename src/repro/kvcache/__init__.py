@@ -24,10 +24,12 @@ from repro.kvcache.paged import (PagedKVCache, append_prefill,
                                  batch_block_table, batch_slot_pos,
                                  clear_row, init_paged_kv_cache,
                                  write_prefill_pages)
+from repro.kvcache.prefix import PrefixIndex
 
 __all__ = [
     "PageAllocator",
     "PagedKVCache",
+    "PrefixIndex",
     "append_prefill",
     "batch_block_table",
     "batch_slot_pos",

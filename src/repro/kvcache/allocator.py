@@ -11,10 +11,17 @@ handed out and its slots are permanently masked (``slot_pos = -1``).
 bound (paper Eq. 5): the engine reserves exactly the slice envelope at
 join/slice-start and releases it at eviction/slice-end, so the tight
 per-slice memory analysis survives all the way down to the allocator.
+
+Pages are *refcounted*: ``share(owner, pages)`` maps a new owner onto
+pages another owner already holds (cross-request prefix sharing), and a
+page only returns to the free list when its last reference drops.  The
+copy-on-write obligation is that a page with refcount > 1 is never
+mutated — writers call ``fork(owner, index)`` first, which swaps in a
+private copy when (and only when) the page is shared.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
 
 # single source of the block-rounding rule, shared with the estimator
 from repro.core.memory import blocks_for
@@ -40,6 +47,8 @@ class PageAllocator:
         # page ids 1..n_pages are usable; 0 is the null page
         self._free: List[int] = list(range(n_pages, 0, -1))  # pop() -> low ids
         self._owned: Dict[int, List[int]] = {}
+        # live reference count per page; absent == page is on the free list
+        self._refs: Dict[int, int] = {}
 
     # ------------------------------------------------------------------
     @property
@@ -49,6 +58,15 @@ class PageAllocator:
     @property
     def used_blocks(self) -> int:
         return self.n_pages - len(self._free)
+
+    @property
+    def shared_blocks(self) -> int:
+        """Number of distinct pages currently held by more than one owner."""
+        return sum(1 for r in self._refs.values() if r > 1)
+
+    def ref_count(self, page: int) -> int:
+        """Live references on ``page`` (0 == on the free list)."""
+        return self._refs.get(page, 0)
 
     def blocks_for_tokens(self, n_tokens: int) -> int:
         return blocks_for(n_tokens, self.page_tokens)
@@ -72,6 +90,8 @@ class PageAllocator:
             raise MemoryError(
                 f"owner {owner}: need {need} blocks, {self.free_blocks} free")
         pages = [self._free.pop() for _ in range(need)]
+        for p in pages:
+            self._refs[p] = 1
         self._owned[owner] = pages
         return list(pages)
 
@@ -95,6 +115,8 @@ class PageAllocator:
                 f"owner {owner}: extend needs {need} blocks, "
                 f"{self.free_blocks} free")
         new = [self._free.pop() for _ in range(need)]
+        for p in new:
+            self._refs[p] = 1
         pages.extend(new)
         return list(new)
 
@@ -114,7 +136,7 @@ class PageAllocator:
         keep = self.blocks_for_tokens(n_tokens)
         freed = 0
         while len(pages) > max(keep, 0):
-            self._free.append(pages.pop())
+            self._drop_ref(pages.pop())
             freed += 1
         return freed
 
@@ -136,8 +158,67 @@ class PageAllocator:
             raise KeyError(
                 f"owner {owner} holds no pages — double release? "
                 f"(live owners: {sorted(self._owned)})")
-        self._free.extend(pages)
+        for p in pages:
+            self._drop_ref(p)
         return len(pages)
+
+    # ------------------------------------------------------------------
+    def share(self, owner: int, pages: Sequence[int]) -> List[int]:
+        """Map a *new* owner onto ``pages`` already held by someone else.
+
+        The cross-request prefix join: a request whose token prefix matches
+        a resident's full pages takes a reference on those pages instead of
+        re-prefilling them.  No allocation happens — the shared pages become
+        the head of ``owner``'s block list (callers ``extend`` afterwards
+        for the novel tail).  Every page must be live (refcount >= 1);
+        sharing a free-list page would alias freshly handed-out memory.
+        """
+        if owner in self._owned:
+            raise KeyError(f"owner {owner} already holds pages")
+        for p in pages:
+            if self._refs.get(p, 0) < 1:
+                raise ValueError(f"page {p} is not live — cannot share")
+            if p == self.NULL_PAGE:
+                raise ValueError("cannot share the null page")
+        for p in pages:
+            self._refs[p] += 1
+        self._owned[owner] = list(pages)
+        return list(pages)
+
+    def fork(self, owner: int, index: int) -> Tuple[int, int]:
+        """Copy-on-write: make ``owner``'s ``index``-th page privately
+        writable; returns ``(old_page, new_page)``.
+
+        When the page is exclusively held (refcount == 1) this is a no-op
+        and ``old == new``.  When it is shared, a fresh page is allocated
+        (``MemoryError`` if the pool is dry), the shared page loses one
+        reference, and the owner's block table entry is swapped — the
+        caller must then copy the device-side page contents ``old -> new``
+        before writing.  The shared page itself is never mutated.
+        """
+        pages = self._owned.get(owner)
+        if pages is None:
+            raise KeyError(f"owner {owner} holds no pages")
+        page = pages[index]
+        if self._refs[page] == 1:
+            return page, page
+        if not self._free:
+            raise MemoryError(f"owner {owner}: fork needs 1 block, 0 free")
+        new = self._free.pop()
+        self._refs[new] = 1
+        self._refs[page] -= 1
+        pages[index] = new
+        return page, new
+
+    def _drop_ref(self, page: int) -> bool:
+        """Drop one reference; free the page when the last one goes."""
+        r = self._refs[page] - 1
+        if r == 0:
+            del self._refs[page]
+            self._free.append(page)
+            return True
+        self._refs[page] = r
+        return False
 
     def pages_of(self, owner: int) -> List[int]:
         return list(self._owned[owner])

@@ -91,8 +91,13 @@ def build_server(cfg: ServingConfig) -> tuple[SliceServer, int]:
                                 kv_layout="paged",
                                 page_tokens=cfg.page_tokens,
                                 kv_pool_tokens=mem.total_blocks
-                                * cfg.page_tokens)
+                                * cfg.page_tokens,
+                                prefix_sharing=cfg.prefix_sharing)
                    for _ in range(cfg.workers)]
+        if cfg.prefix_sharing:
+            print("[serve] COW prefix sharing on: matching prompt "
+                  "prefixes join resident pages refcounted "
+                  "(--no-prefix-sharing disables)")
     else:
         engines = [StaticEngine(model, params, eos_id=1, len_bucket=8)
                    for _ in range(cfg.workers)]

@@ -269,6 +269,54 @@ def attention_prefill_paged(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
     return out, k_pages, v_pages
 
 
+def attention_prefill_tail_paged(p: Params, x: jnp.ndarray,
+                                 positions: jnp.ndarray, cfg: ModelConfig,
+                                 window: Optional[int],
+                                 k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                                 block_table: jnp.ndarray,
+                                 slot_pos: jnp.ndarray,
+                                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Tail prefill over a paged pool whose head KV is already resident.
+
+    The cross-request prefix-sharing path: ``x`` (B,T,d) holds only each
+    row's *novel tail* tokens (left-padded; pad positions < 0) while the
+    shared/retained prefix KV is reachable through ``block_table``.
+    ``positions`` are absolute (prefix_len .. total_len-1) and double as
+    the compact-layout destination slots; ``slot_pos`` (B, nb·pg) covers
+    the full logical window *including* the tail slots.  Tail K/V is
+    scattered into the pages first, then each tail query attends to the
+    gathered full window under the ``slot_pos <= q_pos`` causal mask —
+    intra-tail causality falls out of the same comparison, so one pass
+    covers prefix attention and tail self-attention.  Shared prefix pages
+    are only read: tail writes land at positions past the shared head by
+    construction (the engine shares full pages only).
+    """
+    from repro.kernels import ops as kernel_ops  # deferred: keep models importable without kernels
+    B, T, _ = x.shape
+    pg = k_pages.shape[1]
+    nb = block_table.shape[1]
+    q, k, v = _qkv(p, x, cfg)
+    rp = jnp.maximum(positions, 0)
+    q = apply_rope(q, rp, cfg.rope_theta)
+    k = apply_rope(k, rp, cfg.rope_theta)
+    k_pages, v_pages = kernel_ops.paged_prefill_write(
+        k, v, positions, block_table, k_pages, v_pages)
+    Hkv = k_pages.shape[2]
+    kw = k_pages[block_table].reshape(B, nb * pg, Hkv, k_pages.shape[-1])
+    vw = v_pages[block_table].reshape(B, nb * pg, Hkv, v_pages.shape[-1])
+    pq = positions[:, :, None]  # (B,T,1)
+    pk = slot_pos[:, None, :]   # (B,1,S)
+    m = (pk >= 0) & (pk <= pq)
+    if window is not None:
+        m = m & (pq - pk < window)
+    # pad query rows would be fully masked -> attend slot 0 to avoid NaN
+    # (their output is discarded; slot 0 always holds position 0 here)
+    m = m | ((pq < 0) & (jnp.arange(nb * pg)[None, None, :] == 0))
+    o = gqa_attend(q, kw, vw, m[:, None], cfg.head_dim ** -0.5)
+    out = dense_apply(p["wo"], o.reshape(B, T, -1))
+    return out, k_pages, v_pages
+
+
 def attention_decode(p: Params, x: jnp.ndarray, q_pos: jnp.ndarray,
                      k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      slot_pos: jnp.ndarray, slot: jnp.ndarray,

@@ -189,6 +189,49 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                                         lengths=lengths.astype(jnp.int32))
 
 
+def prefill_tail_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                       start: jnp.ndarray, lengths: jnp.ndarray,
+                       cache: PagedKVCache, window: Optional[int] = None
+                       ) -> Tuple[jnp.ndarray, PagedKVCache]:
+    """Prefill only the novel *tail* of rows whose prefix KV is resident.
+
+    The cross-request prefix-sharing twin of ``prefill_paged``: each row's
+    leading ``start[b]`` tokens already live in pages reachable through
+    ``cache.block_table`` (shared or retained from another request), so
+    ``tokens`` holds only the left-padded tail and the per-token work
+    drops from O(total) to O(tail).  Tail K/V is written at absolute
+    slots ``start..lengths-1`` (compact layout, slot == position) and the
+    tail queries attend to the full gathered window — see
+    ``attention.attention_prefill_tail_paged``.  Returns the next-token
+    logits of each row's last tail token and the refreshed cache
+    (``slot_pos``/``lengths`` cover the full logical stream).
+    """
+    window = window if window is not None else cfg.sliding_window
+    tail = lengths - start
+    base = make_positions(tokens, tail)
+    positions = jnp.where(base >= 0, base + start[:, None], -1)
+    h = embed_apply(params["embed"], tokens, cfg)
+    W = cache.window
+    slots = jnp.arange(W, dtype=jnp.int32)[None]
+    slot_pos = jnp.where(slots < lengths[:, None], slots, -1)
+
+    def body(carry, layer, kp, vp):
+        x = rms_norm(carry, layer["ln_attn"], cfg.norm_eps)
+        a, kp, vp = attn.attention_prefill_tail_paged(
+            layer["attn"], x, positions, cfg, window, kp, vp,
+            cache.block_table, slot_pos)
+        h2 = carry + a
+        m = mlp_apply(layer["mlp"], rms_norm(h2, layer["ln_mlp"], cfg.norm_eps), cfg.act)
+        return h2 + m, (kp, vp)
+
+    h, (k_all, v_all) = scan_layers(body, h, params["layers"],
+                                    cache.k_pages, cache.v_pages)
+    logits = _logits(params, cfg, h[:, -1:, :])
+    return logits[:, 0], cache._replace(k_pages=k_all, v_pages=v_all,
+                                        slot_pos=slot_pos,
+                                        lengths=lengths.astype(jnp.int32))
+
+
 def decode_step(params: Params, cfg: ModelConfig, cache: KVCache,
                 tokens: jnp.ndarray, step: jnp.ndarray,
                 window: Optional[int] = None) -> Tuple[jnp.ndarray, KVCache]:

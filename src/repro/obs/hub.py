@@ -30,10 +30,11 @@ Metric catalog (all ``scls_`` namespaced; catalog with units in
   counters    ``scls_slices_dispatched_total``,
               ``scls_requests_total{outcome}``,
               ``scls_admission_total{action,reason}``,
-              ``scls_reprefill_tokens_total``
+              ``scls_reprefill_tokens_total``,
+              ``scls_prefix_hit_tokens_total``
   gauges      ``scls_queue_depth``, ``scls_in_flight_slices``,
               ``scls_kv_free_pages``, ``scls_kv_retained_blocks``,
-              ``scls_kv_evictions``
+              ``scls_kv_evictions``, ``scls_kv_shared_blocks``
 """
 from __future__ import annotations
 
@@ -97,6 +98,10 @@ class ServingInstruments:
         self.reprefill = registry.counter(
             "scls_reprefill_tokens_total",
             "Tokens re-prefilled beyond each request's first prefill")
+        self.prefix_hit = registry.counter(
+            "scls_prefix_hit_tokens_total",
+            "Prompt tokens satisfied by a shared-prefix page join "
+            "instead of prefill (COW paged KV)")
         self.queue_depth = registry.gauge(
             "scls_queue_depth",
             "Requests waiting to be dispatched (pool + worker queues)")
@@ -112,6 +117,10 @@ class ServingInstruments:
         self.evictions = registry.gauge(
             "scls_kv_evictions",
             "Cumulative resident-prefix evictions under pool pressure")
+        self.shared_blocks = registry.gauge(
+            "scls_kv_shared_blocks",
+            "KV pages currently referenced by more than one request "
+            "(refcounted prefix sharing)")
 
 
 class Observability:
@@ -200,6 +209,8 @@ class Observability:
                         ins.retained.set(s["retained_blocks"])
                     if "evictions" in s:
                         ins.evictions.set(s["evictions"])
+                    if "shared_blocks" in s:
+                        ins.shared_blocks.set(s["shared_blocks"])
 
     def on_arrival(self, core: "SchedulerCore", req: "Request") -> None:
         tr = self.tracer
@@ -297,11 +308,23 @@ class Observability:
                         cat="phase")
 
     def on_slice_done(self, core: "SchedulerCore", wid: int, b: "Batch",
-                      reprefill_tokens: int) -> None:
+                      reprefill_tokens: int, prefix_hit_tokens: int = 0,
+                      shared_blocks: int = 0) -> None:
         ins = self.ins
         if ins is not None:
             ins.reprefill.inc(reprefill_tokens)
             ins.reprefill_hist.observe(reprefill_tokens)
+            if prefix_hit_tokens:
+                ins.prefix_hit.inc(prefix_hit_tokens)
+        # audit only slices where a prefix join actually happened, so
+        # sharing-free runs produce byte-identical decision logs (the
+        # golden-equivalence guard relies on this)
+        if self.audit is not None and prefix_hit_tokens:
+            self.audit.record(
+                "prefix_share", core.now, worker=wid,
+                rids=sorted(r.rid for r in b.requests),
+                prefix_hit_tokens=int(prefix_hit_tokens),
+                shared_blocks=int(shared_blocks))
         self._sample(core)
 
     def on_cont_dispatch(self, core: "SchedulerCore", wid: int,

@@ -9,7 +9,9 @@ for *every* runtime; a :class:`Backend` supplies the physics
 * :class:`AsyncSliceServer` (``repro.serving.aio``) — the concurrent
   front end: a background pacer task steps the core with wall-clock
   pacing while N clients ``await handle.result()`` / ``async for tok in
-  handle.tokens()``;
+  handle.tokens()``; its :class:`Session` runs multi-turn conversations
+  whose history prefix the retain-mode paged backend serves from shared
+  (refcounted, copy-on-write) KV pages instead of re-prefilling;
 * :class:`SliceServer` — the synchronous caller-driven adapter over it
   (``submit`` / per-slice token streaming / ``cancel`` / ``drain``);
 * :class:`AdmissionController` (``repro.serving.admission``) — SLO-aware
@@ -29,7 +31,7 @@ from repro.serving.admission import (NO_ADMISSION, AdmissionController,
                                      AdmissionDecision, AdmissionRejected,
                                      predicted_queue_delay,
                                      predicted_service_time)
-from repro.serving.aio import AsyncRequestHandle, AsyncSliceServer
+from repro.serving.aio import AsyncRequestHandle, AsyncSliceServer, Session
 from repro.serving.backends import (Backend, BatchExecution, RealBackend,
                                     SimBackend)
 from repro.serving.config import (SERVABLE_REAL, ServingConfig,
@@ -42,7 +44,7 @@ __all__ = [
     "AdmissionController", "AdmissionDecision", "AdmissionRejected",
     "AsyncRequestHandle", "AsyncSliceServer", "Backend", "BatchExecution",
     "HTTPFrontend", "NO_ADMISSION", "RealBackend", "RequestHandle",
-    "SERVABLE_REAL", "SchedulerCore", "ServingConfig", "SimBackend",
-    "SliceServer", "WorkerState", "default_sim_environment",
+    "SERVABLE_REAL", "SchedulerCore", "ServingConfig", "Session",
+    "SimBackend", "SliceServer", "WorkerState", "default_sim_environment",
     "fitted_estimator", "predicted_queue_delay", "predicted_service_time",
 ]

@@ -203,6 +203,7 @@ class AsyncSliceServer:
         self.default_slo_ms = default_slo_ms
         self._time_scale = time_scale
         self._next_rid = itertools.count(_SERVER_RID_BASE)
+        self._next_sid = itertools.count(1)
         self._handles: dict[int, AsyncRequestHandle] = {}
         self._closed = False
         # pacer machinery (bound lazily to the first running loop we see)
@@ -248,7 +249,8 @@ class AsyncSliceServer:
                arrival: Optional[float] = None,
                slo_ms: Optional[float] = None,
                deadline: Optional[float] = None,
-               allow_degrade: bool = False) -> AsyncRequestHandle:
+               allow_degrade: bool = False,
+               session_id: Optional[int] = None) -> AsyncRequestHandle:
         """Admit one request; returns a handle immediately.
 
         ``slo_ms`` sets ``deadline = arrival + slo_ms / 1000`` in core
@@ -308,7 +310,7 @@ class AsyncSliceServer:
         req = Request(rid=rid, arrival=arrival_t, input_len=input_len,
                       gen_len=None if gen_len is None else int(gen_len),
                       max_gen=int(max_gen), prompt=prompt,
-                      deadline=deadline_t)
+                      deadline=deadline_t, session_id=session_id)
         self.core.submit(req)
         self.n_submitted += 1
         h = AsyncRequestHandle(self, req)
@@ -336,6 +338,26 @@ class AsyncSliceServer:
         out = self.core.cancel(rid)
         self._kick()
         return out
+
+    # ------------------------------------------------------------------
+    # multi-turn sessions
+    # ------------------------------------------------------------------
+    def session(self, session_id: Optional[int] = None, *,
+                max_gen: int = 1024,
+                slo_ms: Optional[float] = None) -> "Session":
+        """Open a multi-turn :class:`Session`.  Each turn is one ordinary
+        request carrying the whole conversation so far as its prompt; on
+        the real retain-mode backend the previous turn's KV pages are
+        anchored per session, so the next turn's shared prefix becomes a
+        refcounted page-table join instead of a re-prefill."""
+        if session_id is None:
+            session_id = next(self._next_sid)
+        return Session(self, int(session_id), max_gen=max_gen, slo_ms=slo_ms)
+
+    def release_session(self, session_id: int) -> None:
+        """Drop the backend's page anchor for ``session_id`` (no-op on
+        backends without retention)."""
+        self.core.backend.release_session(int(session_id))
 
     def check_admission(self, *, input_len: int, gen_len: Optional[int] = None,
                         max_gen: int = 1024,
@@ -494,3 +516,124 @@ class AsyncSliceServer:
                 self._idle.set()
                 raise
             await asyncio.sleep(0)  # let clients run between transitions
+
+
+class Session:
+    """One multi-turn conversation over an :class:`AsyncSliceServer`.
+
+    A session is a thin client-side convention plus a server-side page
+    anchor: every turn is an ordinary request whose prompt is the whole
+    conversation so far (history + new user tokens), tagged with this
+    session's id.  Schedulers never see sessions — only the real
+    retain-mode backend reads the tag, to keep the finished turn's prefix
+    pages resident so the next turn's history prefix becomes a refcounted
+    page-table join (``PageAllocator.share``) instead of a re-prefill.
+    On the sim backend a session still composes correctly (turn prompts
+    grow by the accumulated length); there is just no KV to share.
+
+    ``submit_turn`` may be called while the previous turn is still in
+    flight — even mid-slice — in which case it awaits that turn's result
+    first, so history is always complete before the next prompt is built.
+
+    Close (or ``async with``) cancels any in-flight turn and drops the
+    backend anchor, returning the session's pages to the free pool.
+    """
+
+    def __init__(self, server: AsyncSliceServer, session_id: int, *,
+                 max_gen: int = 1024, slo_ms: Optional[float] = None):
+        self._server = server
+        self.session_id = int(session_id)
+        self.default_max_gen = int(max_gen)
+        self.default_slo_ms = slo_ms
+        self._history_tokens: Optional[np.ndarray] = None  # real backend
+        self._history_len = 0
+        self._last: Optional[AsyncRequestHandle] = None
+        self._closed = False
+        self.n_turns = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def history_len(self) -> int:
+        """Tokens of conversation context the *next* turn will carry
+        (completed turns only — an in-flight turn is not yet absorbed)."""
+        return self._history_len
+
+    @property
+    def history_tokens(self) -> Optional[List[int]]:
+        """Token-level history (real backend; ``None`` in length-only
+        sim sessions that never saw a prompt array)."""
+        return None if self._history_tokens is None \
+            else list(self._history_tokens)
+
+    @property
+    def last(self) -> Optional[AsyncRequestHandle]:
+        """Handle of the most recently submitted turn, if any."""
+        return self._last
+
+    # ------------------------------------------------------------------
+    def _absorb_last(self) -> None:
+        """Fold the finished previous turn into history.  Cancelled turns
+        are dropped (their pages were freed; history stays pre-turn)."""
+        h = self._last
+        self._last = None
+        if h is None or not h.request.done or h.request.cancelled:
+            return
+        if h.request.prompt is not None:
+            self._history_tokens = np.concatenate(
+                [np.asarray(h.request.prompt, np.int32),
+                 np.asarray(h.output_tokens, np.int32)])
+            self._history_len = int(self._history_tokens.shape[0])
+        else:
+            self._history_len = h.request.input_len + h.request.generated
+
+    async def submit_turn(self, prompt: Optional[np.ndarray] = None, *,
+                          input_len: Optional[int] = None,
+                          gen_len: Optional[int] = None,
+                          max_gen: Optional[int] = None,
+                          slo_ms: Optional[float] = None,
+                          allow_degrade: bool = False
+                          ) -> AsyncRequestHandle:
+        """Submit the next turn: ``prompt`` (real) or ``input_len`` (sim)
+        is the *new* user message only — the accumulated history is
+        prepended here.  Raises
+        :class:`~repro.serving.admission.AdmissionRejected` like
+        ``submit`` (the session survives; retry or close)."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        if prompt is None and input_len is None:
+            raise ValueError("need a prompt or an input_len")
+        if self._last is not None and not self._last.finished:
+            await self._last.result()
+        self._absorb_last()
+        total_len = None
+        if prompt is not None:
+            prompt = np.asarray(prompt, np.int32)
+            if self._history_tokens is not None:
+                prompt = np.concatenate([self._history_tokens, prompt])
+        else:
+            total_len = self._history_len + int(input_len)
+        h = self._server.submit(
+            prompt, input_len=total_len, gen_len=gen_len,
+            max_gen=self.default_max_gen if max_gen is None else int(max_gen),
+            slo_ms=self.default_slo_ms if slo_ms is None else slo_ms,
+            allow_degrade=allow_degrade, session_id=self.session_id)
+        self._last = h
+        self.n_turns += 1
+        return h
+
+    async def close(self) -> None:
+        """Cancel any in-flight turn and release the backend anchor."""
+        if self._closed:
+            return
+        self._closed = True
+        h = self._last
+        if h is not None and not h.finished:
+            h.cancel()
+            await h.result()
+        self._server.release_session(self.session_id)
+
+    async def __aenter__(self) -> "Session":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()

@@ -82,6 +82,11 @@ class BatchExecution:
     per_request: List[RequestOutcome]
     reprefill_tokens: int = 0
     prefill_dur: Optional[float] = None
+    #: prompt tokens satisfied by cross-request prefix-page sharing this
+    #: slice (their prefill was a page-table remap) and the pages those
+    #: joins took references on — 0 outside kv_retain="request"
+    prefix_hit_tokens: int = 0
+    shared_blocks: int = 0
 
 
 @runtime_checkable
@@ -113,6 +118,12 @@ class Backend(Protocol):
         per-REQUEST resources retained across slices (the persistent
         paged prefix pages under ``kv_retain="request"``).  Must be an
         idempotent no-op when nothing is retained."""
+        ...
+
+    def release_session(self, session_id: int) -> None:
+        """A multi-turn session closed: release any prefix pages anchored
+        for it beyond its requests' lifetimes.  Idempotent no-op when the
+        backend retains nothing per session."""
         ...
 
     def prefill_time(self, req: Request) -> float:
@@ -189,6 +200,9 @@ class SimBackend:
     def finish_request(self, req: Request) -> None:
         pass  # no per-request resources in virtual time
 
+    def release_session(self, session_id: int) -> None:
+        pass  # no per-session resources in virtual time
+
     def prefill_time(self, req: Request) -> float:
         return self.true_lat.t_prefill(
             1, req.effective_input_len) * self._noise()
@@ -246,6 +260,9 @@ class RealBackend:
         self.mem = mem if isinstance(mem, PagedMemoryEstimator) else None
         #: kv_retain="request": worker whose engine retains each rid's pages
         self._engine_of: Dict[int, int] = {}
+        #: session_id -> (wid, rid) whose pages are anchored past the
+        #: request's lifetime so the next turn's prefix join can hit them
+        self._session_anchor: Dict[int, tuple] = {}
         if kv_retain == "request" and kv_layout != "paged":
             raise ValueError("kv_retain='request' needs kv_layout='paged'")
         if kv_layout == "paged":
@@ -321,7 +338,9 @@ class RealBackend:
                               early_return=res.early_return,
                               per_request=list(res.results),
                               reprefill_tokens=res.reprefill_tokens,
-                              prefill_dur=res.prefill_time)
+                              prefill_dur=res.prefill_time,
+                              prefix_hit_tokens=res.prefix_hit_tokens,
+                              shared_blocks=res.shared_blocks)
 
     def finish_batch(self, wid: int, batch: Batch) -> None:
         if self.kv_retain == "request":
@@ -332,13 +351,64 @@ class RealBackend:
                 alloc.release(r.rid)
 
     def finish_request(self, req: Request) -> None:
-        """Terminal (finished/cancelled): free the retained prefix pages."""
+        """Terminal (finished/cancelled): free the retained prefix pages.
+
+        A *completed* request belonging to a session is anchored instead:
+        its pages (prompt + answer — exactly the next turn's prefix) stay
+        resident, replacing the session's previous anchor.  Anchored pages
+        remain LRU-evictable under pool pressure and are dropped for good
+        by :meth:`release_session` (or an engine eviction); a *cancelled*
+        turn releases immediately like any other request.
+        """
         if self.kv_retain != "request":
             return
         wid = self._engine_of.pop(req.rid, None)
-        if wid is not None:
+        if wid is None:
+            return
+        sid = getattr(req, "session_id", None)
+        if sid is not None and req.done and not req.cancelled:
+            old = self._session_anchor.get(sid)
+            if old is not None and old[1] != req.rid:
+                self.engines[old[0]].release_request(old[1])
+            self._session_anchor[sid] = (wid, req.rid)
+        else:
             self.engines[wid].release_request(req.rid)
+        self._sync_retained_gauge()
+
+    def release_session(self, session_id: int) -> None:
+        """Drop the session's anchored prefix pages (idempotent)."""
+        anchor = self._session_anchor.pop(session_id, None)
+        if anchor is not None:
+            self.engines[anchor[0]].release_request(anchor[1])
             self._sync_retained_gauge()
+
+    def batch_affinity(self, batch: Batch) -> Optional[int]:
+        """Retention-affinity hint for the offloader's ε-tiebreak: the
+        worker whose resident prefix pages cover the most tokens of this
+        batch's prompts (``None`` when no worker holds a matching prefix).
+        Content-based — it consults each engine's prefix index with the
+        members' effective token streams, so it finds session anchors and
+        shared system prompts alike."""
+        if self.kv_retain != "request":
+            return None
+        streams = []
+        for r in batch.requests:
+            if r.prompt is None:
+                continue
+            gen = r.output_tokens or []
+            streams.append(np.concatenate([np.asarray(r.prompt, np.int64),
+                                           np.asarray(gen, np.int64)])
+                           if gen else np.asarray(r.prompt, np.int64))
+        if not streams:
+            return None
+        best_wid, best_hit = None, 0
+        for wid, eng in enumerate(self.engines):
+            if not getattr(eng, "prefix_sharing", False):
+                continue
+            hit = sum(eng._prefix.lookup(s)[1] for s in streams)
+            if hit > best_hit:
+                best_wid, best_hit = wid, hit
+        return best_wid
 
     def _sync_retained_gauge(self) -> None:
         if self.mem is not None:
@@ -365,6 +435,8 @@ class RealBackend:
         if self.kv_retain == "request":
             snap["retained_blocks"] = sum(a.used_blocks
                                           for a in self.allocators)
+            snap["shared_blocks"] = sum(a.shared_blocks
+                                        for a in self.allocators)
         return snap
 
     def prefill_time(self, req: Request) -> float:

@@ -64,6 +64,12 @@ class ServingConfig:
     # keeps prefix pages resident in the engines across slices so a
     # resumed slice re-prefills nothing (persistent StaticEngine storage)
     kv_retain: str = "slice"             # "slice" | "request"
+    # cross-request COW prefix sharing: on the paged real backend a new
+    # request whose token prefix matches another resident's pages joins
+    # them refcounted (``PageAllocator.share``) instead of prefilling.
+    # No-op on dense layouts and the sim backend; disable to pin the
+    # sharing-free baseline.
+    prefix_sharing: bool = True
     # --- generation-length prediction (repro.predict) ---
     predictor: Optional[str] = None      # scls-pred/oracle only
     coverage: float = 0.7
@@ -220,6 +226,11 @@ class ServingConfig:
                              "on reschedule); 'request' keeps prefix pages "
                              "resident in the engines so resumed slices "
                              "re-prefill nothing")
+        ap.add_argument("--no-prefix-sharing", dest="prefix_sharing",
+                        action="store_false", default=cls.prefix_sharing,
+                        help="disable COW prefix-page sharing on the paged "
+                             "real backend (multi-turn sessions and shared "
+                             "prompts then re-prefill their history)")
         ap.add_argument("--predictor", default=None, choices=list(PREDICTORS),
                         help="length predictor for --strategy scls-pred")
         ap.add_argument("--coverage", type=float, default=cls.coverage,

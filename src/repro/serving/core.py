@@ -111,6 +111,14 @@ class SchedulerCore:
         self.offloader: Offloader = (
             MaxMinOffloader(n_workers) if strategy.offload == "maxmin"
             else RoundRobinOffloader(n_workers))
+        # retention-affinity tiebreak (ROADMAP): a backend that can say
+        # where a batch's prefix pages are resident feeds the max-min
+        # offloader's ε-tiebreak.  SimBackend has no residency (attribute
+        # absent -> affinity stays None and placement is bit-identical to
+        # the affinity-less offloader, which the goldens pin).
+        if strategy.offload == "maxmin" and hasattr(backend,
+                                                    "batch_affinity"):
+            self.offloader.affinity_fn = backend.batch_affinity
         self.pool: List[Request] = []
         self.now = 0.0
         self._events: list = []
@@ -154,6 +162,11 @@ class SchedulerCore:
         #: request's first prefill, summed over all dispatched slices
         #: (0 for resumed residents under kv_retain="request")
         self.reprefill_tokens = 0
+        #: prompt tokens satisfied by cross-request prefix-page sharing
+        #: (their prefill became a page-table remap) and the pages those
+        #: joins took references on, summed over all dispatched slices
+        self.prefix_hit_tokens = 0
+        self.shared_blocks = 0
         self.peak_parallel = 0  # max concurrent requests on one worker
         #: dispatch fingerprint: ["static", wid, rids, input_len, slice] or
         #: ["cont", wid, rids] — pinned by the equivalence golden test
@@ -311,7 +324,9 @@ class SchedulerCore:
                                self.total_batches,
                                n_rejected=self.n_rejected,
                                reprefill_tokens=self.reprefill_tokens,
-                               reject_reasons=self.reject_reasons)
+                               reject_reasons=self.reject_reasons,
+                               prefix_hit_tokens=self.prefix_hit_tokens,
+                               shared_blocks=self.shared_blocks)
 
     # ------------------------------------------------------------------
     # event handlers
@@ -450,6 +465,8 @@ class SchedulerCore:
         self.total_batches += 1
         self.batch_sizes.append(b.size)
         self.reprefill_tokens += ex.reprefill_tokens
+        self.prefix_hit_tokens += ex.prefix_hit_tokens
+        self.shared_blocks += ex.shared_blocks
         if ex.early_return:
             self.early_returns += 1
         self.backend.finish_batch(wid, b)  # e.g. release page envelopes
@@ -495,7 +512,8 @@ class SchedulerCore:
                     if not tgt.busy:
                         self._start_static_fcfs(tgt)
         if self.obs.enabled:
-            self.obs.on_slice_done(self, wid, b, ex.reprefill_tokens)
+            self.obs.on_slice_done(self, wid, b, ex.reprefill_tokens,
+                                   ex.prefix_hit_tokens, ex.shared_blocks)
         if self.s.mode == "perreq" and w.pending and not w.busy:
             self._start_static_fcfs(w)
         elif w.queue:

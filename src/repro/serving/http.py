@@ -10,6 +10,15 @@ asyncio loop on the scheduling side) — no new dependencies:
     ``stream=true`` emits Server-Sent Events with **one chunk per
     completed slice** — the slice is the scheduling atom, so chunk
     boundaries are exactly the moments tokens actually materialize.
+  * ``POST /v1/chat/completions`` — OpenAI chat shape: ``messages``
+    (stateless role/content list) rendered through the fixed chat
+    template (``repro.serving.tokenizer.render_chat``) and tokenized
+    with the invertible byte-level codec when the vocabulary fits.
+    Extension field ``session`` (positive int) tags the request as a
+    turn of a multi-turn conversation: the retain-mode real backend
+    anchors the finished turn's KV pages, so the next turn's rendered
+    history joins the shared prefix pages (COW, refcounted) instead of
+    re-prefilling; ``DELETE /v1/sessions/<id>`` drops the anchor.
   * ``GET /healthz`` — liveness + a scheduler snapshot (strategy, worker
     count, in-flight requests, live queue depth and in-flight slice
     count from the observability gauges, free KV blocks on a paged real
@@ -60,6 +69,7 @@ import numpy as np
 from repro.serving.admission import AdmissionRejected
 from repro.serving.aio import AsyncRequestHandle, AsyncSliceServer
 from repro.serving.backends import RealBackend, SimBackend
+from repro.serving.tokenizer import for_vocab, render_chat
 
 #: default bound on request bodies (1 MiB of JSON is plenty for prompts)
 MAX_BODY_BYTES = 1 << 20
@@ -120,6 +130,7 @@ class HTTPFrontend:
         self.aserver = server
         self.model_name = model_name
         self.vocab_size = int(vocab_size)
+        self.tokenizer = for_vocab(self.vocab_size)
         self.request_timeout = float(request_timeout)
         self._loop = asyncio.new_event_loop()
         self._loop_thread: Optional[threading.Thread] = None
@@ -260,10 +271,9 @@ class HTTPFrontend:
     # ------------------------------------------------------------------
     # request parsing / response shaping
     # ------------------------------------------------------------------
-    def _parse_completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
-        if "prompt" not in body:
-            raise _BadRequest("missing required field 'prompt'")
-        kw = encode_prompt(body["prompt"], self.vocab_size)
+    def _gen_opts(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        """The generation/admission knobs shared by both POST endpoints."""
+        kw: Dict[str, Any] = {}
         max_tokens = body.get("max_tokens", 16)
         if not isinstance(max_tokens, int) or isinstance(max_tokens, bool) \
                 or max_tokens <= 0:
@@ -279,6 +289,49 @@ class HTTPFrontend:
         kw["allow_degrade"] = bool(body.get("allow_degrade", False))
         return kw
 
+    def _parse_completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        if "prompt" not in body:
+            raise _BadRequest("missing required field 'prompt'")
+        kw = encode_prompt(body["prompt"], self.vocab_size)
+        kw.update(self._gen_opts(body))
+        return kw
+
+    def _parse_chat(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        """``/v1/chat/completions``: render the stateless OpenAI message
+        list through the fixed chat template and tokenize.  The
+        ``session`` extension field tags the request so the retain-mode
+        real backend anchors its pages — the next turn of the same
+        session (whose rendered prompt extends this one) then joins the
+        shared prefix pages instead of re-prefilling the history."""
+        messages = body.get("messages")
+        if not isinstance(messages, list) or not messages:
+            raise _BadRequest("messages must be a non-empty list")
+        try:
+            text = render_chat(messages)
+        except ValueError as e:
+            raise _BadRequest(str(e)) from None
+        if self.tokenizer is not None:
+            kw: Dict[str, Any] = dict(
+                prompt=np.asarray(self.tokenizer.encode(text), np.int32))
+        else:  # length-only sim backend
+            kw = dict(input_len=max(1, len(text.split())))
+        kw.update(self._gen_opts(body))
+        session = body.get("session")
+        if session is not None:
+            if not isinstance(session, int) or isinstance(session, bool) \
+                    or session <= 0:
+                raise _BadRequest(f"session must be a positive integer, "
+                                  f"got {session!r}")
+            kw["session_id"] = session
+        return kw
+
+    def _decode_text(self, tokens: List[int]) -> str:
+        """Completion text: real detokenization when the codec round-trips,
+        else the debug space-joined ids."""
+        if self.tokenizer is not None and self.tokenizer.invertible:
+            return self.tokenizer.decode(tokens)
+        return _detok(tokens)
+
     def _completion_obj(self, handle: AsyncRequestHandle, text: str,
                         finish_reason: Optional[str],
                         usage: bool = False) -> Dict[str, Any]:
@@ -292,6 +345,31 @@ class HTTPFrontend:
             obj["usage"] = dict(prompt_tokens=req.input_len,
                                 completion_tokens=req.generated,
                                 total_tokens=req.input_len + req.generated)
+        return obj
+
+    def _chat_obj(self, handle: AsyncRequestHandle, content: str,
+                  finish_reason: Optional[str], usage: bool = False,
+                  chunk: bool = False) -> Dict[str, Any]:
+        if chunk:
+            delta = dict(role="assistant", content=content) if content else {}
+            choice = dict(index=0, delta=delta, finish_reason=finish_reason)
+            obj_type = "chat.completion.chunk"
+        else:
+            choice = dict(index=0,
+                          message=dict(role="assistant", content=content),
+                          finish_reason=finish_reason)
+            obj_type = "chat.completion"
+        obj: Dict[str, Any] = dict(
+            id=f"chatcmpl-{handle.rid}", object=obj_type,
+            created=int(time.time()), model=self.model_name,
+            choices=[choice])
+        if usage:
+            req = handle.request
+            obj["usage"] = dict(prompt_tokens=req.input_len,
+                                completion_tokens=req.generated,
+                                total_tokens=req.input_len + req.generated)
+        if handle.request.session_id is not None:
+            obj["session"] = handle.request.session_id
         return obj
 
     def _finish_reason(self, handle: AsyncRequestHandle) -> str:
@@ -407,12 +485,14 @@ class HTTPFrontend:
 
             def do_POST(self) -> None:  # noqa: N802 — http.server API
                 path = self.path.split("?", 1)[0]
-                if path != "/v1/completions":
+                if path not in ("/v1/completions", "/v1/chat/completions"):
                     self._error(404, f"no route {path}", "invalid_request_error")
                     return
+                chat = path == "/v1/chat/completions"
                 try:
                     body = self._read_body()
-                    kw = front._parse_completion(body)
+                    kw = (front._parse_chat(body) if chat
+                          else front._parse_completion(body))
                 except _BadRequest as e:
                     self._error(400, str(e), "invalid_request_error")
                     return
@@ -429,12 +509,38 @@ class HTTPFrontend:
                                 {"Retry-After": "1"})
                     return
                 if stream:
-                    self._stream(handle)
+                    self._stream(handle, chat)
                 else:
-                    self._complete(handle)
+                    self._complete(handle, chat)
+
+            def do_DELETE(self) -> None:  # noqa: N802 — http.server API
+                path = self.path.split("?", 1)[0]
+                if not path.startswith("/v1/sessions/"):
+                    self._error(404, f"no route {path}", "invalid_request_error")
+                    return
+                try:
+                    sid = int(path[len("/v1/sessions/"):])
+                except ValueError:
+                    self._error(400, "session id must be an integer",
+                                "invalid_request_error")
+                    return
+                front._call(front._release_session(sid))
+                self._json(200, {"object": "session", "id": sid,
+                                 "released": True})
 
             # -- completion bodies -------------------------------------
-            def _complete(self, handle: AsyncRequestHandle) -> None:
+            def _body_obj(self, chat: bool, handle: AsyncRequestHandle,
+                          text: str, finish_reason: Optional[str],
+                          usage: bool = False,
+                          chunk: bool = False) -> Dict[str, Any]:
+                if chat:
+                    return front._chat_obj(handle, text, finish_reason,
+                                           usage=usage, chunk=chunk)
+                return front._completion_obj(handle, text, finish_reason,
+                                             usage=usage)
+
+            def _complete(self, handle: AsyncRequestHandle,
+                          chat: bool = False) -> None:
                 try:
                     front._call(handle.result())
                 except FuturesTimeout:
@@ -442,11 +548,14 @@ class HTTPFrontend:
                     front._call(front._cancel(handle))
                     self._error(504, "request timed out", "server_error")
                     return
-                self._json(200, front._completion_obj(
-                    handle, _detok(handle.output_tokens),
-                    front._finish_reason(handle), usage=True))
+                text = (front._decode_text(handle.output_tokens) if chat
+                        else _detok(handle.output_tokens))
+                self._json(200, self._body_obj(
+                    chat, handle, text, front._finish_reason(handle),
+                    usage=True))
 
-            def _stream(self, handle: AsyncRequestHandle) -> None:
+            def _stream(self, handle: AsyncRequestHandle,
+                        chat: bool = False) -> None:
                 """SSE: one ``data:`` chunk per completed slice."""
                 self.send_response(200)
                 self.send_header("Content-Type", "text/event-stream")
@@ -460,13 +569,16 @@ class HTTPFrontend:
                             chunk = front._call(agen.__anext__())
                         except StopAsyncIteration:
                             break
-                        obj = front._completion_obj(handle, _detok(chunk),
-                                                    None)
+                        text = (front._decode_text(chunk) if chat
+                                else _detok(chunk))
+                        obj = self._body_obj(chat, handle, text, None,
+                                             chunk=True)
                         self.wfile.write(b"data: " + json.dumps(obj).encode()
                                          + b"\n\n")
                         self.wfile.flush()
-                    final = front._completion_obj(
-                        handle, "", front._finish_reason(handle), usage=True)
+                    final = self._body_obj(
+                        chat, handle, "", front._finish_reason(handle),
+                        usage=True, chunk=True)
                     self.wfile.write(b"data: " + json.dumps(final).encode()
                                      + b"\n\n")
                     self.wfile.write(b"data: [DONE]\n\n")
@@ -479,6 +591,9 @@ class HTTPFrontend:
                     front._call(front._cancel(handle))
 
         return Handler
+
+    async def _release_session(self, session_id: int) -> None:
+        self.aserver.release_session(session_id)
 
     async def _cancel(self, handle: AsyncRequestHandle) -> bool:
         return handle.cancel()

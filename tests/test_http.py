@@ -126,9 +126,12 @@ def test_bad_requests_get_400_not_500(frontend):
         assert json.loads(raw)["error"]["type"] == "invalid_request_error"
     resp, _ = _request(frontend, "GET", "/nope")
     assert resp.status == 404
-    resp, _ = _request(frontend, "POST", "/v1/chat/completions",
-                       {"prompt": "x"})
-    assert resp.status == 404
+    # /v1/chat/completions exists since PR 7: a completions-style body
+    # (no messages) is malformed for it, not an unknown route
+    resp, raw = _request(frontend, "POST", "/v1/chat/completions",
+                         {"prompt": "x"})
+    assert resp.status == 400
+    assert json.loads(raw)["error"]["type"] == "invalid_request_error"
 
 
 def test_metrics_json_endpoint_reports_run_metrics(frontend):

@@ -283,3 +283,203 @@ def test_batch_views_remap_retained_rows():
     sp = batch_slot_pos([5, 0], n_blocks=2, page_tokens=4)
     np.testing.assert_array_equal(sp[0], [0, 1, 2, 3, 4, -1, -1, -1])
     assert (sp[1] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# refcounted sharing + copy-on-write (PR 7)
+# ---------------------------------------------------------------------------
+def test_share_takes_references_and_frees_on_last_release():
+    a = PageAllocator(n_pages=8, page_tokens=8)
+    donor = a.reserve(owner=1, n_tokens=32)           # 4 pages
+    shared = a.share(owner=2, pages=donor[:2])
+    assert shared == donor[:2]
+    assert a.shared_blocks == 2
+    assert [a.ref_count(p) for p in donor] == [2, 2, 1, 1]
+    assert a.used_blocks == 4                          # no new allocation
+    # donor releases first: shared pages stay live for owner 2
+    a.release(1)
+    assert [a.ref_count(p) for p in donor] == [1, 1, 0, 0]
+    assert a.used_blocks == 2 and a.shared_blocks == 0
+    a.release(2)
+    assert a.free_blocks == 8 and a.owners() == []
+
+
+def test_share_rejects_existing_owner_free_page_and_null():
+    a = PageAllocator(n_pages=4, page_tokens=8)
+    pages = a.reserve(owner=1, n_tokens=8)
+    with pytest.raises(KeyError):
+        a.share(owner=1, pages=pages)                  # owner already holds
+    free_page = a.n_pages                              # still on the free list
+    with pytest.raises(ValueError):
+        a.share(owner=2, pages=[free_page])
+    with pytest.raises(ValueError):
+        a.share(owner=2, pages=[PageAllocator.NULL_PAGE])
+    assert a.owners() == [1]                           # nothing leaked
+
+
+def test_fork_is_noop_on_exclusive_and_copies_on_shared():
+    a = PageAllocator(n_pages=8, page_tokens=8)
+    donor = a.reserve(owner=1, n_tokens=16)            # 2 pages
+    old, new = a.fork(owner=1, index=0)                # exclusive: no-op
+    assert old == new == donor[0]
+    a.share(owner=2, pages=donor)
+    old, new = a.fork(owner=2, index=1)                # shared: private copy
+    assert old == donor[1] and new != old
+    assert a.ref_count(old) == 1 and a.ref_count(new) == 1
+    assert a.pages_of(1) == donor                      # donor mapping intact
+    assert a.pages_of(2) == [donor[0], new]
+    assert a.shared_blocks == 1                        # only page 0 still shared
+
+
+def test_fork_raises_when_pool_dry_without_corruption():
+    a = PageAllocator(n_pages=2, page_tokens=8)
+    donor = a.reserve(owner=1, n_tokens=16)            # whole pool
+    a.share(owner=2, pages=donor)
+    with pytest.raises(MemoryError):
+        a.fork(owner=2, index=0)
+    assert a.pages_of(2) == donor                      # entry not swapped
+    assert a.ref_count(donor[0]) == 2                  # refcount untouched
+
+
+def test_shrink_on_shared_tail_drops_ref_not_page():
+    a = PageAllocator(n_pages=4, page_tokens=8)
+    donor = a.reserve(owner=1, n_tokens=24)            # 3 pages
+    a.share(owner=2, pages=donor)
+    a.shrink(2, 8)                                     # owner 2 keeps 1 page
+    assert a.pages_of(2) == donor[:1]
+    assert a.pages_of(1) == donor                      # donor untouched
+    assert [a.ref_count(p) for p in donor] == [2, 1, 1]
+    assert a.free_blocks == 1                          # nothing freed yet
+
+
+def _churn_check(a, mirror):
+    """The conservation + refcount invariants after every churn op."""
+    from collections import Counter
+    counts = Counter(p for pages in mirror.values() for p in pages)
+    assert a.used_blocks + a.free_blocks == a.n_pages
+    assert a.used_blocks == len(counts)
+    for p, c in counts.items():
+        assert a.ref_count(p) == c
+    assert a.shared_blocks == sum(1 for c in counts.values() if c > 1)
+    free = set(a._free)
+    assert len(free) == len(a._free)                   # no double-free
+    assert free.isdisjoint(counts)                     # live pages never free
+    assert PageAllocator.NULL_PAGE not in counts
+    assert PageAllocator.NULL_PAGE not in free
+    for o, pages in mirror.items():
+        assert a.pages_of(o) == pages
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(
+           st.sampled_from(["reserve", "extend", "shrink", "share",
+                            "fork", "release"]),
+           st.integers(0, 5), st.integers(1, 80)),
+       min_size=1, max_size=60),
+       st.sampled_from([4, 8, 16]))
+def test_allocator_churn_conservation_and_cow(ops, page_tokens):
+    """Arbitrary reserve/extend/shrink/share/fork/release churn against a
+    mirror model: used + free == total always, a live-referenced page is
+    never on the free list, fork copies exactly when shared, and a full
+    release drains back to the free-block baseline."""
+    a = PageAllocator(n_pages=24, page_tokens=page_tokens)
+    mirror = {}
+    for code, owner, n in ops:
+        if code == "reserve":
+            if owner in mirror or not a.can_reserve(n):
+                with pytest.raises((KeyError, MemoryError)):
+                    a.reserve(owner, n)
+            else:
+                mirror[owner] = a.reserve(owner, n)
+        elif code == "extend":
+            if owner not in mirror:
+                with pytest.raises(KeyError):
+                    a.extend(owner, n)
+            else:
+                need = blocks_for(n, page_tokens) - len(mirror[owner])
+                if need > a.free_blocks:
+                    with pytest.raises(MemoryError):
+                        a.extend(owner, n)
+                else:
+                    mirror[owner] = mirror[owner] + a.extend(owner, n)
+        elif code == "shrink":
+            if owner not in mirror:
+                with pytest.raises(KeyError):
+                    a.shrink(owner, n)
+            else:
+                keep = blocks_for(n, page_tokens)
+                expect = max(0, len(mirror[owner]) - keep)
+                assert a.shrink(owner, n) == expect
+                if expect:
+                    mirror[owner] = mirror[owner][:-expect]
+        elif code == "share":
+            donors = sorted(mirror)
+            if not donors:
+                continue
+            donor = donors[n % len(donors)]
+            pages = mirror[donor][:1 + n % len(mirror[donor])]
+            if owner in mirror:
+                with pytest.raises(KeyError):
+                    a.share(owner, pages)
+            else:
+                mirror[owner] = a.share(owner, pages)
+        elif code == "fork":
+            if owner not in mirror:
+                with pytest.raises(KeyError):
+                    a.fork(owner, 0)
+                continue
+            idx = n % len(mirror[owner])
+            page = mirror[owner][idx]
+            shared = sum(p == page for pages in mirror.values()
+                         for p in pages) > 1
+            if shared and a.free_blocks == 0:
+                with pytest.raises(MemoryError):
+                    a.fork(owner, idx)
+            else:
+                old, new = a.fork(owner, idx)
+                assert old == page
+                assert (new != old) == shared          # copy iff shared
+                mirror[owner][idx] = new
+        elif code == "release":
+            if owner not in mirror:
+                with pytest.raises(KeyError):
+                    a.release(owner)
+            else:
+                assert a.release(owner) == len(mirror.pop(owner))
+        _churn_check(a, mirror)
+    for o in sorted(mirror):
+        a.release(o)
+    assert a.free_blocks == a.n_pages                  # baseline restored
+    assert a.shared_blocks == 0 and a.owners() == []
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex (page-granular LCP lookup for the sharing join)
+# ---------------------------------------------------------------------------
+def test_prefix_index_lookup_matches_full_pages_only():
+    from repro.kvcache import PrefixIndex
+    idx = PrefixIndex(page_tokens=4)
+    stream = np.arange(10, dtype=np.int32)             # 2 full pages + tail
+    idx.insert(owner=1, tokens=stream, pages=[5, 6, 7])
+    pages, hit = idx.lookup(np.arange(12, dtype=np.int32))
+    assert pages == [5, 6] and hit == 8                # tail page not indexed
+    pages, hit = idx.lookup(np.arange(6, dtype=np.int32))
+    assert pages == [5] and hit == 4                   # partial second page
+    pages, hit = idx.lookup(np.asarray([9, 9, 9, 9], np.int32))
+    assert pages == [] and hit == 0                    # content mismatch
+
+
+def test_prefix_index_deterministic_donor_and_removal():
+    from repro.kvcache import PrefixIndex
+    idx = PrefixIndex(page_tokens=4)
+    stream = np.arange(8, dtype=np.int32)
+    idx.insert(owner=9, tokens=stream, pages=[3, 4])
+    idx.insert(owner=2, tokens=stream, pages=[6, 7])
+    pages, hit = idx.lookup(stream)
+    assert pages == [6, 7] and hit == 8                # min owner id wins
+    idx.remove(2)
+    pages, hit = idx.lookup(stream)
+    assert pages == [3, 4] and hit == 8                # falls back to 9
+    idx.remove(9)
+    assert idx.lookup(stream) == ([], 0)               # trie pruned empty
+    idx.remove(9)                                      # idempotent

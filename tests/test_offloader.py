@@ -94,3 +94,60 @@ def test_assignments_never_exceed_worker_count(times, n_workers, use_maxmin):
     assert set(off.loads) == set(range(n_workers))
     # conservation: total load == total estimated time (Eq. 11 additions)
     assert sum(off.loads.values()) == pytest.approx(sum(times))
+
+
+# ---------------------------------------------------------------------------
+# retention-affinity epsilon-tiebreak (PR 7): a worker holding the batch's
+# resident prefix pages wins placement only within epsilon * est_time of
+# the Eq. 11 minimum — affinity never overrides real imbalance
+# ---------------------------------------------------------------------------
+def test_affinity_tiebreak_prefers_resident_worker_within_epsilon():
+    off = MaxMinOffloader(2, epsilon=0.25)
+    off.loads = {0: 0.0, 1: 0.1}
+    off.affinity_fn = lambda b: 1
+    [(w, _)] = off.assign([_batch(0, 1.0)])
+    assert w == 1                                      # 0.1 <= 0.0 + 0.25*1.0
+    assert off.loads == {0: 0.0, 1: 1.1}               # Eq. 11 charged there
+
+
+def test_affinity_tiebreak_yields_to_real_imbalance():
+    off = MaxMinOffloader(2, epsilon=0.25)
+    off.loads = {0: 0.0, 1: 0.5}
+    off.affinity_fn = lambda b: 1
+    [(w, _)] = off.assign([_batch(0, 1.0)])
+    assert w == 0                                      # 0.5 > 0.25: balance wins
+    # the load the affinity worker would have taken stays bounded: the
+    # epsilon contract is |load(pref) - min| <= epsilon * est at override
+    off2 = MaxMinOffloader(2, epsilon=0.25)
+    off2.affinity_fn = lambda b: 1
+    for i in range(8):                                 # every batch prefers w1
+        off2.assign([_batch(i, 1.0)])
+    assert abs(off2.loads[1] - off2.loads[0]) <= 0.25 * 1.0 + 1.0
+
+
+def test_affinity_hook_absent_none_or_unknown_changes_nothing():
+    plain = MaxMinOffloader(3)
+    assert plain.affinity_fn is None and plain.epsilon == 0.25
+    armed = MaxMinOffloader(3)
+    armed.affinity_fn = lambda b: None                 # nothing resident
+    stale = MaxMinOffloader(3)
+    stale.affinity_fn = lambda b: 99                   # worker long gone
+    batches = [_batch(i, float(3 - i % 3)) for i in range(9)]
+    import copy
+    want = [(w, b.requests[0].rid)
+            for w, b in plain.assign(copy.deepcopy(batches))]
+    for off in (armed, stale):
+        got = [(w, b.requests[0].rid)
+               for w, b in off.assign(copy.deepcopy(batches))]
+        assert got == want
+        assert off.loads == plain.loads
+
+
+def test_affinity_epsilon_validated():
+    with pytest.raises(ValueError):
+        MaxMinOffloader(2, epsilon=-0.1)
+    off = MaxMinOffloader(2, epsilon=0.0)              # 0 = exact ties only
+    off.loads = {0: 0.0, 1: 0.0}
+    off.affinity_fn = lambda b: 1
+    [(w, _)] = off.assign([_batch(0, 1.0)])
+    assert w == 1
