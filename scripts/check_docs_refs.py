@@ -1,10 +1,11 @@
 #!/usr/bin/env python
-"""Docs reference checker (CI docs job).
+"""Docs reference checker (CI docs job) — now a thin shim.
 
-Asserts that every ``path.py:Symbol`` reference in the docs actually
-resolves — the file exists AND the symbol imports — and that every local
-markdown link points at an existing file.  Keeps docs/paper_map.md and
-docs/architecture.md honest as the code evolves.
+The actual logic lives in the ``docs-refs`` pass of the repro.analysis
+suite (`src/repro/analysis/passes/docs_refs.py:DocsRefsPass`), where it
+shares the findings format, per-line suppressions, and baseline support
+with every other rule.  This entry point is kept for the existing CI
+wiring and muscle memory:
 
   PYTHONPATH=src python scripts/check_docs_refs.py [files...]
 
@@ -13,75 +14,27 @@ Exits non-zero listing all stale references.
 """
 from __future__ import annotations
 
-import importlib
 import pathlib
-import re
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
 
-# `src/repro/core/memory.py:AnalyticMemoryEstimator.kv_bytes` inside backticks
-REF_RE = re.compile(r"`([\w/.-]+\.py):([A-Za-z_][\w.]*)`")
-# [text](local/path.md) — skip URLs and intra-page anchors
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#]+?)(?:#[^)]*)?\)")
-
-
-def module_name(path: str) -> str:
-    p = pathlib.PurePosixPath(path)
-    parts = p.with_suffix("").parts
-    if parts[0] == "src":
-        parts = parts[1:]
-    return ".".join(parts)
-
-
-def check_symbol_ref(path: str, symbol: str) -> str | None:
-    """Returns an error string, or None when the reference resolves."""
-    if not (REPO / path).is_file():
-        return f"file does not exist: {path}"
-    try:
-        mod = importlib.import_module(module_name(path))
-    except Exception as e:  # noqa: BLE001 — any import failure is a doc bug
-        return f"cannot import {module_name(path)}: {e!r}"
-    obj = mod
-    for attr in symbol.split("."):
-        try:
-            obj = getattr(obj, attr)
-        except AttributeError:
-            return f"{module_name(path)} has no symbol {symbol!r}"
-    return None
-
-
-def check_file(md: pathlib.Path) -> list[str]:
-    text = md.read_text()
-    errors = []
-    for path, symbol in REF_RE.findall(text):
-        err = check_symbol_ref(path, symbol)
-        if err:
-            errors.append(f"{md.relative_to(REPO)}: `{path}:{symbol}` — {err}")
-    for target in LINK_RE.findall(text):
-        if "://" in target or target.startswith("mailto:"):
-            continue
-        resolved = (md.parent / target).resolve()
-        if not resolved.exists():
-            errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
-    return errors
+from repro.analysis import SourceFile, run_analysis  # noqa: E402
+from repro.analysis.passes.docs_refs import DocsRefsPass  # noqa: E402
 
 
 def main(argv: list[str]) -> int:
-    if argv:
-        files = [pathlib.Path(a).resolve() for a in argv]
-    else:
-        files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
-    errors = []
-    n_refs = 0
-    for md in files:
-        n_refs += len(REF_RE.findall(md.read_text()))
-        errors.extend(check_file(md))
-    if errors:
-        print(f"[check_docs_refs] {len(errors)} stale reference(s):")
-        for e in errors:
-            print(f"  - {e}")
+    paths = [pathlib.Path(a).resolve() for a in argv] or None
+    report = run_analysis(repo=REPO, rules=["docs-refs"], paths=paths)
+    if not report.ok:
+        print(f"[check_docs_refs] {len(report.findings)} stale reference(s):")
+        for f in report.findings:
+            print(f"  - {f.render(with_hint=False)}")
         return 1
+    pa = DocsRefsPass()
+    files = paths if paths is not None else pa.files(REPO)
+    n_refs = sum(pa.count_refs(SourceFile(REPO, p)) for p in files)
     print(f"[check_docs_refs] OK: {n_refs} symbol refs across "
           f"{len(files)} files resolve")
     return 0

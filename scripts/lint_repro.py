@@ -1,0 +1,24 @@
+#!/usr/bin/env python
+"""Run the repro-specific static-analysis suite — the CI blocking lint.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis`` but runnable
+from anywhere without setting PYTHONPATH:
+
+  python scripts/lint_repro.py --all
+  python scripts/lint_repro.py --rule obs-guard src/repro/serving
+  python scripts/lint_repro.py --list-rules
+
+See docs/static_analysis.md for the rule catalog and suppression syntax.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,57 @@
+"""repro.analysis — the repo-specific static-analysis suite.
+
+The invariants this codebase runs on — allocator acquire/release pairing
+(PR 5/7), the ``self.obs.enabled`` guard discipline (PR 6), golden-log
+bit-exactness of the scheduler (PR 3), the Pallas kernel conventions
+(PR 2), and a fully typed public serving surface — used to be checked
+only dynamically, if at all.  This package proves them at lint time:
+
+  ============================  ===========================================
+  rule                          invariant
+  ============================  ===========================================
+  ``allocator-pairing``         every ``PageAllocator`` acquisition reaches
+                                a release on all exit paths (CFG dataflow)
+  ``obs-guard``                 every ``*.obs.on_*`` hook call is behind
+                                ``if *.obs.enabled:``
+  ``determinism``               golden-pinned modules: no wall clocks,
+                                unseeded RNGs, id()/hash() ordering, or
+                                unordered-set iteration
+  ``pallas-conventions``        kernels have a jnp oracle + ops dispatch;
+                                clean index maps; valid aliases; no Python
+                                branching on traced refs
+  ``api-typing``                repro.kvcache / repro.serving signatures
+                                fully annotated
+  ``docs-refs``                 docs ``path.py:Symbol`` refs + local links
+                                resolve (the PR 2 docs job, now a pass)
+  ============================  ===========================================
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis --all     # CI-blocking form
+    python -m repro.analysis --rule obs-guard src/repro/serving
+    python scripts/lint_repro.py                      # equivalent shim
+
+Suppress a single accepted exception (with a justification)::
+
+    pages = alloc.reserve(rid, n)  # repro: transfer(allocator-pairing) — why
+
+See docs/static_analysis.md for the rule catalog and how to add a pass.
+"""
+from repro.analysis.framework import (AnalysisPass, AnalysisReport, Finding,
+                                      PASSES, SourceFile, all_rules,
+                                      find_repo_root, load_baseline, register,
+                                      run_analysis, write_baseline)
+
+__all__ = [
+    "AnalysisPass",
+    "AnalysisReport",
+    "Finding",
+    "PASSES",
+    "SourceFile",
+    "all_rules",
+    "find_repo_root",
+    "load_baseline",
+    "register",
+    "run_analysis",
+    "write_baseline",
+]

@@ -1,0 +1,81 @@
+"""CLI for the static-analysis suite: ``python -m repro.analysis``.
+
+Exit status 0 when every selected rule is clean (suppressed/baselined
+findings excluded), 1 otherwise — CI runs ``--all`` as a blocking job.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis.framework import (PASSES, all_rules, find_repo_root,
+                                      load_baseline, run_analysis,
+                                      write_baseline)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static-analysis suite "
+                    "(see docs/static_analysis.md)")
+    p.add_argument("paths", nargs="*", type=pathlib.Path,
+                   help="restrict analysis to these files/directories "
+                        "(default: each rule's own target set)")
+    p.add_argument("--all", action="store_true",
+                   help="run every registered rule (the default when no "
+                        "--rule is given; CI uses this spelling)")
+    p.add_argument("--rule", action="append", default=[], metavar="NAME",
+                   help="run only this rule (repeatable)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="list registered rules and exit")
+    p.add_argument("--repo", type=pathlib.Path, default=None,
+                   help="repository root (default: auto-detected)")
+    p.add_argument("--baseline", type=pathlib.Path, default=None,
+                   help="JSON baseline of findings to ignore")
+    p.add_argument("--write-baseline", type=pathlib.Path, default=None,
+                   metavar="FILE",
+                   help="write current findings to FILE and exit 0 "
+                        "(adopting a rule over legacy code incrementally)")
+    p.add_argument("--no-hints", action="store_true",
+                   help="omit fix hints from the output")
+    return p
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        width = max(len(n) for n in all_rules())
+        for name in all_rules():
+            print(f"{name:<{width}}  {PASSES[name].description}")
+        return 0
+    if args.all and args.rule:
+        print("error: --all and --rule are mutually exclusive",
+              file=sys.stderr)
+        return 2
+    rules: Optional[List[str]] = args.rule or None
+    repo = args.repo or find_repo_root()
+    baseline = load_baseline(args.baseline) if args.baseline else None
+    try:
+        report = run_analysis(repo=repo, rules=rules,
+                              paths=args.paths or None, baseline=baseline)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    if args.write_baseline is not None:
+        write_baseline(args.write_baseline, report.findings)
+        print(f"[repro.analysis] baseline with {len(report.findings)} "
+              f"finding(s) written to {args.write_baseline}")
+        return 0
+    if args.no_hints:
+        for f in report.findings:
+            print(f.render(with_hint=False))
+        print(report.render().splitlines()[-1])
+    else:
+        print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,26 @@
+"""Pass registry — importing this package registers every rule.
+
+Adding a pass: create a module here, subclass
+:class:`repro.analysis.framework.AnalysisPass`, decorate it with
+``@register``, and import the module below.  docs/static_analysis.md
+documents the full recipe.
+"""
+from repro.analysis.passes import (allocator_pairing, api_typing,  # noqa: F401
+                                   determinism, docs_refs, obs_guard,
+                                   pallas_conventions)
+
+from repro.analysis.passes.allocator_pairing import AllocatorPairingPass
+from repro.analysis.passes.api_typing import ApiTypingPass
+from repro.analysis.passes.determinism import DeterminismPass
+from repro.analysis.passes.docs_refs import DocsRefsPass
+from repro.analysis.passes.obs_guard import ObsGuardPass
+from repro.analysis.passes.pallas_conventions import PallasConventionsPass
+
+__all__ = [
+    "AllocatorPairingPass",
+    "ApiTypingPass",
+    "DeterminismPass",
+    "DocsRefsPass",
+    "ObsGuardPass",
+    "PallasConventionsPass",
+]

@@ -166,64 +166,76 @@ class ContinuousEngine:
         concurrency: List[int] = []
         t0 = time.perf_counter()
         iters = 0
-        while iters < max_iters:
-            iters += 1
-            # --- joins (FCFS): dense is capped by slot count alone
-            # (conservative memory mgmt); paged additionally requires the
-            # request's (L_i + S) envelope to fit in free pages — the cap
-            # becomes the *actual* free memory
-            for s_i, s in enumerate(slots):
-                if s.req_idx < 0 and waiting:
-                    ridx = waiting[0]
-                    if self.kv_layout == "paged":
-                        need = self._tokens_needed(
-                            len(prompts[ridx]), min(forced[ridx], max_gen))
-                        if not self.alloc.can_reserve(need):
-                            break  # FCFS: head of line waits for pages
-                        pages = self.alloc.reserve(ridx, need)
-                        waiting.pop(0)
-                        first, base = self._insert_paged(s_i, prompts[ridx],
-                                                         pages)
+        try:
+            while iters < max_iters:
+                iters += 1
+                # --- joins (FCFS): dense is capped by slot count alone
+                # (conservative memory mgmt); paged additionally requires the
+                # request's (L_i + S) envelope to fit in free pages — the cap
+                # becomes the *actual* free memory
+                for s_i, s in enumerate(slots):
+                    if s.req_idx < 0 and waiting:
+                        ridx = waiting[0]
+                        if self.kv_layout == "paged":
+                            need = self._tokens_needed(
+                                len(prompts[ridx]), min(forced[ridx], max_gen))
+                            if not self.alloc.can_reserve(need):
+                                break  # FCFS: head of line waits for pages
+                            pages = self.alloc.reserve(ridx, need)
+                            waiting.pop(0)
+                            first, base = self._insert_paged(s_i, prompts[ridx],
+                                                             pages)
+                        else:
+                            waiting.pop(0)
+                            first, base = self._insert(s_i, prompts[ridx])
+                        s.req_idx = ridx
+                        s.cached = len(prompts[ridx])
+                        s.base = base
+                        s.gen = 0
+                        s.cur = first
+                        s.forced = min(forced[ridx], max_gen)
+                        join_order.append(ridx)
+                active = [s for s in slots if s.req_idx >= 0]
+                if not active:
+                    break
+                concurrency.append(len(active))
+                # --- one decode iteration over all slots (inactive rows masked)
+                cur = np.zeros((self.max_slots,), np.int32)
+                q_pos = np.zeros((self.max_slots,), np.int32)
+                wslots = np.zeros((self.max_slots,), np.int32)
+                for s_i, s in enumerate(slots):
+                    if s.req_idx >= 0:
+                        cur[s_i] = s.cur
+                        q_pos[s_i] = s.cached + s.gen
+                        wslots[s_i] = (s.base + s.gen) % self.W
+                logits, self.cache = self._decode(self.params, self.cache,
+                                                  jnp.asarray(cur), jnp.asarray(q_pos),
+                                                  jnp.asarray(wslots))
+                nxt = np.asarray(greedy(logits))
+                for s_i, s in enumerate(slots):
+                    if s.req_idx < 0:
+                        continue
+                    outputs[s.req_idx].append(int(s.cur))
+                    s.gen += 1
+                    finished = (s.cur == self.eos_id) or (s.gen >= s.forced)
+                    if finished:
+                        if self.kv_layout == "paged":
+                            self.alloc.release(s.req_idx)
+                            self.cache = clear_row(self.cache, s_i)
+                        s.req_idx = -1  # exit immediately; slot joins next iter
                     else:
-                        waiting.pop(0)
-                        first, base = self._insert(s_i, prompts[ridx])
-                    s.req_idx = ridx
-                    s.cached = len(prompts[ridx])
-                    s.base = base
-                    s.gen = 0
-                    s.cur = first
-                    s.forced = min(forced[ridx], max_gen)
-                    join_order.append(ridx)
-            active = [s for s in slots if s.req_idx >= 0]
-            if not active:
-                break
-            concurrency.append(len(active))
-            # --- one decode iteration over all slots (inactive rows masked)
-            cur = np.zeros((self.max_slots,), np.int32)
-            q_pos = np.zeros((self.max_slots,), np.int32)
-            wslots = np.zeros((self.max_slots,), np.int32)
-            for s_i, s in enumerate(slots):
-                if s.req_idx >= 0:
-                    cur[s_i] = s.cur
-                    q_pos[s_i] = s.cached + s.gen
-                    wslots[s_i] = (s.base + s.gen) % self.W
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(cur), jnp.asarray(q_pos),
-                                              jnp.asarray(wslots))
-            nxt = np.asarray(greedy(logits))
-            for s_i, s in enumerate(slots):
-                if s.req_idx < 0:
-                    continue
-                outputs[s.req_idx].append(int(s.cur))
-                s.gen += 1
-                finished = (s.cur == self.eos_id) or (s.gen >= s.forced)
-                if finished:
-                    if self.kv_layout == "paged":
+                        s.cur = int(nxt[s_i])
+        finally:
+            if self.kv_layout == "paged":
+                # unwind: a mid-iteration exception (or max_iters
+                # exhaustion) must not strand in-flight envelopes in the
+                # engine-owned pool — the allocator outlives this call,
+                # so a stranded owner would wedge every later serve()
+                for s_i, s in enumerate(slots):
+                    if s.req_idx >= 0:
                         self.alloc.release(s.req_idx)
                         self.cache = clear_row(self.cache, s_i)
-                    s.req_idx = -1  # exit immediately; slot joins next iter
-                else:
-                    s.cur = int(nxt[s_i])
+                        s.req_idx = -1
         wall = time.perf_counter() - t0
         return ContinuousResult(outputs, wall, iters, join_order, concurrency)
 

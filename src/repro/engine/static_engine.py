@@ -263,7 +263,10 @@ class StaticEngine:
         re-raises ``MemoryError`` when no parked victim remains."""
         while True:
             try:
-                self.allocator.extend(rid, need)
+                # grows the caller's reservation; serve_batch_paged unwinds
+                # it on MemoryError and retention frees it later via
+                # release_request/_evict
+                self.allocator.extend(rid, need)  # repro: transfer(allocator-pairing) — caller-owned reservation
                 return
             except MemoryError:
                 victim = self._lru_parked(protected)
@@ -366,7 +369,11 @@ class StaticEngine:
                     # its own evict-on-pressure loop.  On MemoryError the
                     # rid is already in ``fresh`` so the outer unwind drops
                     # its shared references too.
-                    self.allocator.share(rid, hit_pages)
+                    # retained past this call by design (kv_retain=
+                    # "request"): freed by release_request/_evict; the
+                    # except MemoryError arm below unwinds rows granted
+                    # in THIS call
+                    self.allocator.share(rid, hit_pages)  # repro: transfer(allocator-pairing) — retention owns it
                     fresh.append(rid)
                     self._extend_evicting(rid, need, batch_set)
                     shared_start[i] = len(hit_pages) * pg
@@ -375,10 +382,14 @@ class StaticEngine:
                     while True:
                         try:
                             if res is not None:
-                                if self.allocator.extend(rid, need):
+                                # both arms retained by design (see the
+                                # share above): freed via release_request/
+                                # _evict, unwound by the except MemoryError
+                                # arm below
+                                if self.allocator.extend(rid, need):  # repro: transfer(allocator-pairing) — retention owns it
                                     grown.append((rid, res.n_tokens))
                             else:
-                                self.allocator.reserve(rid, need)
+                                self.allocator.reserve(rid, need)  # repro: transfer(allocator-pairing) — see above
                                 fresh.append(rid)
                             break
                         except MemoryError:

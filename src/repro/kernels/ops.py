@@ -130,5 +130,5 @@ def ssd_chunked_scan(x, dt, A, B, C, chunk: int = 128,
         Bh = jnp.broadcast_to(B[:, :, :1], B.shape[:2] + (H, B.shape[-1]))             if G == 1 else jnp.repeat(B, H // G, axis=2)
         Ch = jnp.broadcast_to(C[:, :, :1], C.shape[:2] + (H, C.shape[-1]))             if G == 1 else jnp.repeat(C, H // G, axis=2)
         return _ssd_pallas(x, dt, A, Bh, Ch, chunk, interpret=_interpret())
-    from repro.models.mamba2 import _ssd_chunked
-    return _ssd_chunked(x, dt, A, B, C, chunk)
+    from repro.kernels.ref import ssd_scan_ref
+    return ssd_scan_ref(x, dt, A, B, C, chunk)

@@ -105,3 +105,55 @@ def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
     o = jnp.einsum("bhgw,bwhd->bhgd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
     return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 B: jnp.ndarray, C: jnp.ndarray, Q: int,
+                 init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan (Mamba-2, arXiv:2405.21060) — the ``ssd_scan``
+    kernel's oracle and the XLA dispatch path.
+
+    x (B,T,H,P); dt (B,T,H) >=0 (0 at pads); A (H,) negative; B,C (B,T,G,N).
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).  T % Q must be 0.
+    """
+    Bsz, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    nc = T // Q
+    rep = H // G
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = B.reshape(Bsz, nc, Q, G, N)
+    Cc = C.reshape(Bsz, nc, Q, G, N)
+
+    log_a = dtc * A  # (B,nc,Q,H), <= 0
+    cum = jnp.cumsum(log_a, axis=2)  # inclusive cumsum within chunk
+    # intra-chunk (attention-like): y[t] += sum_{s<=t} (C_t.B_s) e^{cum_t-cum_s} dt_s x_s
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (B,nc,G,Q,Q)
+    CB = jnp.repeat(CB, rep, axis=2)  # (B,nc,H,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H) t,s
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    w = CB * jnp.transpose(decay, (0, 1, 4, 2, 3)) * causal[None, None, None]
+    w = w * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # dt_s
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w, xc)
+    # chunk states: S_c = sum_s e^{cum_end - cum_s} dt_s B_s (x) x_s
+    seg = jnp.exp(cum[:, :, -1:, :] - cum) * dtc  # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", seg, Bh, xc)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), S.dtype)
+
+    def step(h, xs):
+        dec, s = xs  # dec (B,H), s (B,H,P,N)
+        h_new = h * dec[:, :, None, None] + s
+        return h_new, h  # emit state *entering* the chunk
+
+    final, h_in = jax.lax.scan(step, init_state,
+                               (chunk_decay.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+    # inter-chunk contribution: y[t] += C_t . (e^{cum_t} * h_in)
+    Ch = jnp.repeat(Cc, rep, axis=3)  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Ch, h_in) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, final

@@ -10,7 +10,7 @@ MXU (Q = 128 aligns with the 128-lane register file):
        + C_t · (e^{cum_t} ⊙ state_in)                     (inter)
   state_out = e^{cum_Q} state_in + Σ_s e^{cum_Q - cum_s} dt_s B_s ⊗ x_s
 
-Numerics follow models/mamba2._ssd_chunked (the oracle) exactly: fp32
+Numerics follow ref.ssd_scan_ref (the oracle) exactly: fp32
 throughout the recurrence, single-group B/C shared across heads is handled
 by the caller broadcasting (this kernel takes per-head B/C blocks).
 """

@@ -19,7 +19,7 @@ through scalar-prefetched block tables instead of materializing it.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Tuple
+from typing import Any, List, NamedTuple, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -51,7 +51,7 @@ class PagedKVCache(NamedTuple):
 
 def init_paged_kv_cache(n_layers: int, batch: int, n_pages: int,
                         page_tokens: int, max_blocks_per_row: int,
-                        n_kv: int, head_dim: int, dtype) -> PagedKVCache:
+                        n_kv: int, head_dim: int, dtype: Any) -> PagedKVCache:
     """``n_pages`` usable pages; one extra null page (id 0) is added."""
     P = n_pages + 1
     return PagedKVCache(

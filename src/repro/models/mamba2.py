@@ -19,6 +19,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ref import ssd_scan_ref as _ssd_chunked
 from repro.models.common import (ModelConfig, Params, dense_apply, dense_param,
                                  embed_apply, init_embed, init_rms, rms_norm,
                                  scan_layers, stack_layers, unembed_apply,
@@ -70,53 +71,9 @@ def _causal_conv(p: Params, xBC: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray
     return jax.nn.silu(out + p["conv_b"])
 
 
-def _ssd_chunked(x, dt, A, B, C, Q: int, init_state=None):
-    """Chunked SSD scan.
-
-    x (B,T,H,P); dt (B,T,H) >=0 (0 at pads); A (H,) negative; B,C (B,T,G,N).
-    Returns (y (B,T,H,P), final_state (B,H,P,N)).  T % Q must be 0.
-    """
-    Bsz, T, H, P = x.shape
-    G, N = B.shape[2], B.shape[3]
-    nc = T // Q
-    rep = H // G
-    xc = x.reshape(Bsz, nc, Q, H, P)
-    dtc = dt.reshape(Bsz, nc, Q, H)
-    Bc = B.reshape(Bsz, nc, Q, G, N)
-    Cc = C.reshape(Bsz, nc, Q, G, N)
-
-    log_a = dtc * A  # (B,nc,Q,H), <= 0
-    cum = jnp.cumsum(log_a, axis=2)  # inclusive cumsum within chunk
-    # intra-chunk (attention-like): y[t] += sum_{s<=t} (C_t.B_s) e^{cum_t-cum_s} dt_s x_s
-    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (B,nc,G,Q,Q)
-    CB = jnp.repeat(CB, rep, axis=2)  # (B,nc,H,Q,Q)
-    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H) t,s
-    causal = jnp.tril(jnp.ones((Q, Q), bool))
-    w = CB * jnp.transpose(decay, (0, 1, 4, 2, 3)) * causal[None, None, None]
-    w = w * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # dt_s
-    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w, xc)
-    # chunk states: S_c = sum_s e^{cum_end - cum_s} dt_s B_s (x) x_s
-    seg = jnp.exp(cum[:, :, -1:, :] - cum) * dtc  # (B,nc,Q,H)
-    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
-    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", seg, Bh, xc)
-    # inter-chunk recurrence
-    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
-    if init_state is None:
-        init_state = jnp.zeros((Bsz, H, P, N), S.dtype)
-
-    def step(h, xs):
-        dec, s = xs  # dec (B,H), s (B,H,P,N)
-        h_new = h * dec[:, :, None, None] + s
-        return h_new, h  # emit state *entering* the chunk
-
-    final, h_in = jax.lax.scan(step, init_state,
-                               (chunk_decay.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
-    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
-    # inter-chunk contribution: y[t] += C_t . (e^{cum_t} * h_in)
-    Ch = jnp.repeat(Cc, rep, axis=3)  # (B,nc,Q,H,N)
-    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Ch, h_in) * jnp.exp(cum)[..., None]
-    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
-    return y, final
+# The chunked SSD scan lives in repro.kernels.ref:ssd_scan_ref — it is
+# both this model's temporal mixer (XLA path) and the allclose oracle for
+# the ssd_scan Pallas kernel, so there is exactly one copy of the math.
 
 
 def mixer_forward(p: Params, u: jnp.ndarray, valid: jnp.ndarray, cfg: ModelConfig,

@@ -41,12 +41,13 @@ from __future__ import annotations
 
 import asyncio
 import itertools
-from typing import AsyncIterator, List, Optional, Sequence
+from typing import Any, AsyncIterator, List, Optional, Sequence
 
 import numpy as np
 
 from repro.cluster.metrics import RunMetrics
 from repro.core.request import Request
+from repro.core.schedulers import StrategyConfig
 from repro.serving.admission import (AdmissionController, AdmissionDecision,
                                      AdmissionRejected)
 from repro.serving.backends import SimBackend
@@ -61,7 +62,7 @@ class RequestView:
     """Read-only view of one submitted request (shared by the sync and
     async handles — all state lives in the core/request, never here)."""
 
-    def __init__(self, server, request: Request):
+    def __init__(self, server: Any, request: Request):
         self._server = server
         self.request = request
 
@@ -220,7 +221,7 @@ class AsyncSliceServer:
 
     # ------------------------------------------------------------------
     @property
-    def strategy(self):
+    def strategy(self) -> StrategyConfig:
         return self.core.s
 
     @property
@@ -410,7 +411,7 @@ class AsyncSliceServer:
         self._ensure_running()
         return self
 
-    async def __aexit__(self, *exc) -> None:
+    async def __aexit__(self, *exc: object) -> None:
         if exc == (None, None, None):
             await self.close()
         elif self._task is not None:  # on error, don't mask it by draining
@@ -635,5 +636,5 @@ class Session:
     async def __aenter__(self) -> "Session":
         return self
 
-    async def __aexit__(self, *exc) -> None:
+    async def __aexit__(self, *exc: object) -> None:
         await self.close()

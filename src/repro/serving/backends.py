@@ -330,7 +330,10 @@ class RealBackend:
                     # slice start: every member holds the batch envelope
                     # L_i + S (rows are padded to the batch input length,
                     # as the engine's per-batch cache is)
-                    alloc.reserve(r.rid, batch.input_len + batch.slice_len)
+                    # the envelope is owned by the dispatch protocol:
+                    # SchedulerCore calls finish_batch at slice end
+                    # (cancel paths included), which releases every member
+                    alloc.reserve(r.rid, batch.input_len + batch.slice_len)  # repro: transfer(allocator-pairing) — finish_batch releases
             res = eng.serve_batch(prompts, batch.slice_len,
                                   forced_gen_lens=forced,
                                   already_generated=list(prev_tokens))

@@ -35,7 +35,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -269,7 +269,7 @@ class SchedulerCore:
     def is_finalized(self, rid: int) -> bool:
         return rid in self._finalized
 
-    def add_observer(self, fn) -> None:
+    def add_observer(self, fn: Callable[[str, Request], None]) -> None:
         """Register a progress observer ``fn(kind, request)`` — see
         ``_observers`` in ``__init__``."""
         self._observers.append(fn)

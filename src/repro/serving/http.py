@@ -62,7 +62,7 @@ import zlib
 from concurrent.futures import TimeoutError as FuturesTimeout
 from dataclasses import asdict
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Dict, List, Optional
+from typing import Any, Coroutine, Dict, List, Optional
 
 import numpy as np
 
@@ -177,7 +177,7 @@ class HTTPFrontend:
     def __enter__(self) -> "HTTPFrontend":
         return self.start()
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, *exc: object) -> None:
         self.shutdown(drain=exc == (None, None, None))
 
     @property
@@ -206,7 +206,8 @@ class HTTPFrontend:
                 pass
             self.aserver._task = None
 
-    def _call(self, coro, timeout: Optional[float] = None):
+    def _call(self, coro: Coroutine[Any, Any, Any],
+              timeout: Optional[float] = None) -> Any:
         """Run ``coro`` on the scheduler loop from a handler thread."""
         fut = asyncio.run_coroutine_threadsafe(coro, self._loop)
         return fut.result(self.request_timeout if timeout is None else timeout)
@@ -394,7 +395,7 @@ class HTTPFrontend:
     # ------------------------------------------------------------------
     # the handler class (closure over this frontend)
     # ------------------------------------------------------------------
-    def _handler_class(self):
+    def _handler_class(self) -> type:
         front = self
 
         class Handler(BaseHTTPRequestHandler):

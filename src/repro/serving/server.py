@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.cluster.metrics import RunMetrics
 from repro.core.request import Request
+from repro.core.schedulers import StrategyConfig
 from repro.serving.admission import AdmissionController
 from repro.serving.aio import (_SERVER_RID_BASE, AsyncSliceServer,
                                RequestView)
@@ -102,7 +103,7 @@ class SliceServer:
 
     # ------------------------------------------------------------------
     @property
-    def strategy(self):
+    def strategy(self) -> StrategyConfig:
         return self.core.s
 
     @property
@@ -182,7 +183,7 @@ class SliceServer:
     def __enter__(self) -> "SliceServer":
         return self
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, *exc: object) -> None:
         if exc == (None, None, None):
             self.close()
         # on error, don't mask it by draining

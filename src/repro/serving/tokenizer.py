@@ -25,7 +25,7 @@ and the equivalence tests share.
 from __future__ import annotations
 
 import zlib
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 #: ids below this are reserved: 0 = pad/BOS, 1 = EOS (StaticEngine eos_id)
 BYTE_OFFSET = 2
@@ -75,7 +75,7 @@ class HashTokenizer:
         return "".join(f" {i}" for i in ids)
 
 
-def for_vocab(vocab_size: int):
+def for_vocab(vocab_size: int) -> Optional[Union[ByteTokenizer, HashTokenizer]]:
     """The codec for a model vocabulary: byte-level when it fits (real
     backends, invertible), hash fallback for tiny vocabularies, ``None``
     for the length-only sim backend (``vocab_size == 0``)."""

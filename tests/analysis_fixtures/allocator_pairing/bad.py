@@ -1,0 +1,15 @@
+"""BAD fixture: the PR 3 cancel-path shape — acquires that can exit
+without a release and carry no ownership-transfer annotation."""
+
+
+def cancel_request(alloc, rid, n, active):
+    pages = alloc.reserve(rid, n)          # line 6: leaks on both exits
+    if rid not in active:
+        return None                        # cancel path: never released
+    return pages
+
+
+def risky_extend(allocator, rid, n):
+    allocator.extend(rid, n)               # line 13: leaks on exception
+    validate(rid)                          # may raise before the release
+    allocator.release(rid)

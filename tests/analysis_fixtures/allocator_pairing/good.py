@@ -1,0 +1,31 @@
+"""GOOD fixture: the three accepted shapes — paired release on all
+paths, the blessed conditional-cleanup ``finally``, and an annotated
+ownership transfer."""
+
+
+def paired(alloc, rid, n):
+    pages = alloc.reserve(rid, n)
+    try:
+        process(pages)
+    finally:
+        alloc.release(rid)
+
+
+def conditional_finally(alloc, slots, rid, n):
+    # the canonical unwind loop: the finally releases exactly the
+    # residual owner set, which the dataflow cannot prove — blessed
+    try:
+        alloc.reserve(rid, n)
+        run(slots)
+    finally:
+        for s in slots:
+            if s.owner >= 0:
+                alloc.release(s.owner)
+
+
+def transfer(alloc, rid, n):
+    return alloc.reserve(rid, n)  # repro: transfer(allocator-pairing) — caller releases
+
+
+def unrelated_list_extend(pool, items):
+    pool.extend(items)  # list method, not an allocator: never matched

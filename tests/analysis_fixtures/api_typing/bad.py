@@ -1,0 +1,14 @@
+"""BAD fixture: unannotated public surface."""
+
+
+def loose(a, b=3):                         # line 4: params + return missing
+    return a + b
+
+
+class Thing:
+    def __init__(self, size, dtype) -> None:   # line 9: params missing
+        self.size = size
+        self.dtype = dtype
+
+    def run(self, x: int):                 # line 13: return missing
+        return x * self.size

@@ -1,0 +1,18 @@
+"""GOOD fixture: fully annotated, plus the accepted exemptions."""
+from typing import Any
+
+
+def tight(a: int, b: int = 3) -> int:
+    return a + b
+
+
+class Thing:
+    def __init__(self, size: int, dtype: Any) -> None:  # __init__: no return
+        self.size = size
+        self.dtype = dtype
+
+    def close(self, *exc: object) -> None:  # annotated vararg
+        pass
+
+    def legacy(self, blob):  # repro: allow(api-typing) — accepted exception
+        return blob

@@ -1,0 +1,17 @@
+"""BAD fixture: every construct the determinism rule bans."""
+import random
+import time
+
+import numpy as np
+
+
+def schedule(reqs):
+    t = time.time()                        # line 9: wall clock
+    random.shuffle(reqs)                   # line 10: global stdlib RNG
+    noise = np.random.uniform()            # line 11: global numpy RNG
+    rng = np.random.default_rng()          # line 12: seedless ctor
+    reqs.sort(key=lambda r: id(r))         # line 13: id() ordering
+    pending = {r.rid for r in reqs}
+    for rid in pending:                    # line 15: unordered-set iteration
+        touch(rid, t, noise, rng)
+    return pending.pop()                   # line 17: arbitrary element

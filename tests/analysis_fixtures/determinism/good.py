@@ -1,0 +1,12 @@
+"""GOOD fixture: the deterministic spellings of the same code."""
+import numpy as np
+
+
+def schedule(reqs, now):
+    rng = np.random.default_rng(0)         # seeded ctor: allowed
+    noise = rng.uniform()                  # instance method: allowed
+    reqs.sort(key=lambda r: r.rid)
+    pending = {r.rid for r in reqs}
+    for rid in sorted(pending):            # sorted(): order pinned
+        touch(rid, now, noise)
+    return min(pending)

@@ -1,0 +1,15 @@
+"""BAD fixture: hook calls outside their ``.enabled`` guard."""
+
+
+class Engine:
+    def step(self):
+        self.obs.on_step(1)                # line 6: no guard at all
+
+    def finish(self):
+        if self.obs.enabled:
+            self.obs.on_finish()
+        self.obs.on_late()                 # line 11: outside the guard
+
+    def wrong_chain(self):
+        if self.obs.enabled:
+            self.core.obs.on_other()       # line 15: guard checks self.obs

@@ -1,0 +1,28 @@
+"""GOOD fixture: every guarded form the pass accepts."""
+
+
+class Engine:
+    def block_guard(self):
+        if self.obs.enabled:
+            self.obs.on_step(1)
+
+    def early_exit_guard(self):
+        if not self.obs.enabled:
+            return
+        self.obs.on_step(2)
+
+    def and_guard(self):
+        if self.obs.enabled and self.ready:
+            self.obs.on_ready()
+
+    def other_chain(self):
+        if self.core.obs.enabled:
+            self.core.obs.on_admission()
+
+    def loop_inside_guard(self):
+        if self.obs.enabled:
+            for r in self.batch:
+                self.obs.on_request(r)
+
+    def not_a_hook(self):
+        self.scheduler.on_tick()  # receiver is not an .obs chain

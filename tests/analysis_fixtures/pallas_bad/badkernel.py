@@ -1,0 +1,20 @@
+"""BAD fixture kernel: no oracle, no dispatch, mutable index-map
+closure, out-of-range aliases, Python branching on a traced ref."""
+import jax
+import jax.experimental.pallas as pl
+
+
+def badkernel(x, y):
+    shapes = [x.shape[0]]                  # mutable local ...
+    return pl.pallas_call(
+        _impl,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec((8,), lambda i: (shapes[0],))],  # ... closed over
+        input_output_aliases={5: 0, 0: 3},  # key 5 / value 3 out of range
+    )(x, y)
+
+
+def _impl(x_ref, o_ref):
+    v = x_ref[0]
+    if v > 0:                              # Python branch on traced value
+        o_ref[0] = v

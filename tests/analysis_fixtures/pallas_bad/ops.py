@@ -1,0 +1,2 @@
+"""Dispatch module for the bad fixture — deliberately never imports
+the kernel, so the xla/pallas impl switch does not cover it."""

@@ -1,0 +1,2 @@
+"""Oracle module for the bad fixture — deliberately missing
+``badkernel_ref``."""

@@ -1,0 +1,22 @@
+"""GOOD fixture kernel: oracle + dispatch declared, immutable index-map
+closure, in-range aliases, ``@pl.when`` instead of Python branching."""
+import jax
+import jax.experimental.pallas as pl
+
+
+def goodkernel(x):
+    block = x.shape[0]                     # int local: fine to close over
+    return pl.pallas_call(
+        _impl,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        input_output_aliases={0: 0},
+    )(x)
+
+
+def _impl(x_ref, o_ref):
+    v = x_ref[0]
+
+    @pl.when(v > 0)
+    def _():
+        o_ref[0] = v

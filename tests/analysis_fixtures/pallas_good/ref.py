@@ -1,0 +1,6 @@
+"""Oracle module for the good fixture."""
+import jax.numpy as jnp
+
+
+def goodkernel_ref(x):
+    return jnp.where(x > 0, x, 0)

@@ -1,0 +1,190 @@
+"""The static-analysis suite (repro.analysis): every rule must fire on
+its known-bad fixture at the expected lines, stay silent on the good
+twin, honor suppressions, and — the self-check — report the repo at
+HEAD clean."""
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import SourceFile, find_repo_root, run_analysis
+from repro.analysis.framework import PASSES, all_rules
+from repro.analysis.passes import (AllocatorPairingPass, ApiTypingPass,
+                                   DeterminismPass, DocsRefsPass,
+                                   ObsGuardPass, PallasConventionsPass)
+
+REPO = find_repo_root()
+FIX = REPO / "tests" / "analysis_fixtures"
+
+
+def run_on(pass_cls, *paths, **attrs):
+    """Run one pass over explicit files, applying the framework's
+    suppression filter (as run_analysis would)."""
+    pa = pass_cls()
+    for k, v in attrs.items():
+        setattr(pa, k, v)
+    sfs = [SourceFile(REPO, p) for p in paths]
+    by_rel = {sf.rel: sf for sf in sfs}
+    return [f for f in pa.run(REPO, sfs)
+            if not by_rel[f.path].suppressed(f.rule, f.line)]
+
+
+def lines(findings):
+    return sorted(f.line for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_all_rules_registered():
+    assert all_rules() == ["allocator-pairing", "api-typing", "determinism",
+                           "docs-refs", "obs-guard", "pallas-conventions"]
+    for name, cls in PASSES.items():
+        assert cls.description, name
+
+
+# ---------------------------------------------------------------------------
+# allocator-pairing
+# ---------------------------------------------------------------------------
+def test_allocator_pairing_flags_cancel_leak_shapes():
+    fs = run_on(AllocatorPairingPass, FIX / "allocator_pairing" / "bad.py")
+    assert lines(fs) == [6, 13]
+    assert all(f.rule == "allocator-pairing" for f in fs)
+    # the PR 3 shape: reserve leaks via the early-return cancel path
+    assert "reserve" in fs[0].message
+    # release on the normal path only: the exceptional exit still leaks
+    assert "exception" in fs[1].message
+
+
+def test_allocator_pairing_accepts_paired_blessed_and_transfer():
+    assert run_on(AllocatorPairingPass,
+                  FIX / "allocator_pairing" / "good.py") == []
+
+
+# ---------------------------------------------------------------------------
+# obs-guard
+# ---------------------------------------------------------------------------
+def test_obs_guard_flags_unguarded_hooks():
+    fs = run_on(ObsGuardPass, FIX / "obs_guard" / "bad.py")
+    assert lines(fs) == [6, 11, 15]
+    # the guard must check the *same* chain as the call's receiver
+    assert "self.core.obs" in fs[2].message
+
+
+def test_obs_guard_accepts_every_guard_form():
+    assert run_on(ObsGuardPass, FIX / "obs_guard" / "good.py") == []
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_determinism_flags_every_banned_construct():
+    fs = run_on(DeterminismPass, FIX / "determinism" / "bad.py")
+    assert lines(fs) == [9, 10, 11, 12, 13, 15, 17]
+    text = " | ".join(f.message for f in fs)
+    for needle in ("wall-clock", "global-RNG", "without a seed", "id()",
+                   "unordered set", ".pop()"):
+        assert needle in text, needle
+
+
+def test_determinism_accepts_seeded_and_sorted_spellings():
+    assert run_on(DeterminismPass, FIX / "determinism" / "good.py") == []
+
+
+# ---------------------------------------------------------------------------
+# pallas-conventions
+# ---------------------------------------------------------------------------
+def _pallas_run(subdir):
+    d = FIX / subdir
+    return run_on(PallasConventionsPass, *sorted(d.glob("*.py")),
+                  kernels_dir=f"tests/analysis_fixtures/{subdir}")
+
+
+def test_pallas_conventions_flags_all_five_contract_breaks():
+    fs = _pallas_run("pallas_bad")
+    text = " | ".join(f.message for f in fs)
+    assert "not dispatched" in text                      # no ops.py import
+    assert "no jnp oracle" in text                       # no badkernel_ref
+    assert "mutable container" in text                   # index-map closure
+    assert "key 5 is out of range" in text               # 2 operands only
+    assert "value 3 is out of range" in text             # 1 output only
+    assert "branches on traced value" in text            # if on x_ref value
+    assert lines(fs) == [1, 7, 12, 13, 13, 19]
+
+
+def test_pallas_conventions_accepts_conforming_kernel():
+    assert _pallas_run("pallas_good") == []
+
+
+# ---------------------------------------------------------------------------
+# api-typing
+# ---------------------------------------------------------------------------
+def test_api_typing_flags_unannotated_defs():
+    fs = run_on(ApiTypingPass, FIX / "api_typing" / "bad.py")
+    assert lines(fs) == [4, 4, 9, 13]  # loose: params + return
+
+
+def test_api_typing_accepts_annotations_and_exemptions():
+    # __init__ return, annotated *vararg, and a header-line allow
+    assert run_on(ApiTypingPass, FIX / "api_typing" / "good.py") == []
+
+
+# ---------------------------------------------------------------------------
+# docs-refs
+# ---------------------------------------------------------------------------
+def test_docs_refs_flags_dead_symbols_and_links():
+    fs = run_on(DocsRefsPass, FIX / "docs_refs" / "bad.md")
+    assert lines(fs) == [3, 4, 6]
+    assert "no symbol" in fs[0].message
+    assert "does not exist" in fs[1].message
+    assert "broken link" in fs[2].message
+
+
+def test_docs_refs_accepts_resolving_refs():
+    assert run_on(DocsRefsPass, FIX / "docs_refs" / "good.md") == []
+
+
+# ---------------------------------------------------------------------------
+# suppression mechanics
+# ---------------------------------------------------------------------------
+def test_class_header_allow_covers_whole_body(tmp_path):
+    p = tmp_path / "x.py"
+    p.write_text("class C:  # repro: allow(api-typing)\n"
+                 "    def f(self, a):\n"
+                 "        return a\n")
+    assert run_on(ApiTypingPass, p) == []
+
+
+def test_wildcard_allow_suppresses_any_rule(tmp_path):
+    p = tmp_path / "x.py"
+    p.write_text("def f(a):  # repro: allow(*)\n    return a\n")
+    assert run_on(ApiTypingPass, p) == []
+
+
+def test_unsuppressed_twin_still_fires(tmp_path):
+    p = tmp_path / "x.py"
+    p.write_text("def f(a):\n    return a\n")
+    assert len(run_on(ApiTypingPass, p)) == 2
+
+
+# ---------------------------------------------------------------------------
+# self-check + CLI
+# ---------------------------------------------------------------------------
+def test_suite_is_clean_on_repo_at_head():
+    """The acceptance bar: zero unsuppressed findings over the tree."""
+    report = run_analysis(repo=REPO)
+    assert report.ok, "\n" + report.render()
+    assert report.n_files > 90  # really scanned the tree, not a subset
+
+
+@pytest.mark.parametrize("argv,code,needle", [
+    (["--list-rules"], 0, "allocator-pairing"),
+    (["--all"], 0, "[repro.analysis] OK"),
+    (["--rule", "nope"], 2, "unknown rule"),
+])
+def test_cli(argv, code, needle):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == code, proc.stdout + proc.stderr
+    assert needle in proc.stdout + proc.stderr

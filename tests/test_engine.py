@@ -203,3 +203,24 @@ def test_engine_profiler_produces_fittable_samples(dense_setup):
                                       repeats=1)
     assert est.t_serve(2, 32, 4) > 0
     assert np.isfinite(prmse) and np.isfinite(drmse)
+
+
+def test_paged_engine_releases_pages_when_serve_stops_mid_flight(dense_setup):
+    """A serve() that ends with rows still in flight (max_iters exhaustion
+    here, standing in for a mid-iteration exception) must return every
+    in-flight envelope to the pool: the allocator outlives serve(), so a
+    stranded owner would wedge every later call — the cancel-leak class
+    the allocator-pairing lint flags."""
+    cfg, model, params = dense_setup
+    pe = ContinuousEngine(model, params, max_slots=2, max_context=64,
+                          eos_id=1, len_bucket=8, kv_layout="paged",
+                          page_tokens=8)
+    prompts = _prompts(cfg, [5, 9], seed=11)
+    res = pe.serve(prompts, forced_gen_lens=[30, 30], max_iters=3)
+    assert res.iterations == 3  # stopped with both rows unfinished
+    assert all(len(o) < 30 for o in res.outputs)
+    assert pe.alloc.free_blocks == pe.alloc.n_pages  # nothing stranded
+    # and the pool is genuinely reusable: a full serve() still works
+    res2 = pe.serve(prompts, forced_gen_lens=[3, 3])
+    assert all(len(o) == 3 for o in res2.outputs)
+    assert pe.alloc.free_blocks == pe.alloc.n_pages
