@@ -1,0 +1,277 @@
+"""Fleet benchmark: open-loop Poisson traffic through the fleet router
+against 3 serving instances, one arm per placement policy.
+
+Each arm stands up three fresh sim-backend instances (full scheduler
+stacks behind ``HTTPFrontend``, wall-clock paced) and one
+:class:`~repro.fleet.router.FleetRouter`, then drives the *same* seeded
+workload through the router:
+
+  * **singles** — open-loop Poisson arrivals (wall-clock sleeps, arrivals
+    independent of completions), bimodal sizes: mostly light requests
+    plus a heavy tail that punishes count-based placement;
+  * **sessions** — multi-turn chats (``session`` ids) whose rendered
+    history grows every turn: placement *off* the previous turn's
+    instance re-prefills the resident history (§3.3), which the router
+    books as ``reprefill_tokens``.
+
+Measured per arm (from the router's own accounting, so identical over
+sim and real instances):
+
+  * ``imbalance`` — max/min per-instance served tokens (prompt +
+    completion, from proxied usage);
+  * ``reprefill_tokens`` — session history recomputed because a turn
+    migrated off its pinned instance.
+
+Asserted (the PR 9 acceptance bar): ``retention_affinity`` <=
+``round_robin`` on BOTH metrics — the Eq. 10–11 load signal one level
+up balances served tokens at least as well as blind rotation while
+paying strictly less re-prefill.  Emits
+``bench_results/BENCH_fleet.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet [--smoke]
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import os
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.fleet import FleetRouter, imbalance
+from repro.serving import HTTPFrontend, ServingConfig
+
+SMOKE = "--smoke" in sys.argv
+OUT_DIR = os.environ.get("BENCH_OUT", "bench_results")
+
+#: virtual seconds served per wall second on each instance.  Capacity is
+#: host-independent (workers x TIME_SCALE virtual s per wall s vs
+#: wall-clock Poisson arrivals), and the value is chosen so the fleet
+#: runs ~80% utilized — the load-balancing regime the paper's Eq. 10–11
+#: signal exists for; an idle fleet would make every policy look alike
+TIME_SCALE = 16.0
+N_INSTANCES = 3
+ARMS = ("round_robin", "least_load", "retention_affinity")
+
+# workload scale (smoke keeps the same shape, smaller)
+RATE = 18.0 if SMOKE else 22.0          # singles per wall second
+DURATION = 2.5 if SMOKE else 5.0        # arrival window, wall seconds
+N_SESSIONS = 6 if SMOKE else 12
+N_TURNS = 3 if SMOKE else 5
+POLL_INTERVAL = 0.25
+
+
+def _build_instances(seed0: int) -> List[HTTPFrontend]:
+    fronts = []
+    for i in range(N_INSTANCES):
+        cfg = ServingConfig(strategy="scls", workers=2, slice_len=32,
+                            gamma=0.5, seed=seed0 + i,
+                            time_scale=TIME_SCALE)
+        fronts.append(HTTPFrontend(cfg.build_sim().aio, port=0).start())
+    return fronts
+
+
+def _post(host: str, port: int, path: str, body: Dict[str, Any],
+          timeout: float = 120.0) -> Tuple[int, bytes]:
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        conn.request("POST", path, json.dumps(body),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        return resp.status, resp.read()
+    finally:
+        conn.close()
+
+
+def _get_json(host: str, port: int, path: str) -> Dict[str, Any]:
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    try:
+        conn.request("GET", path)
+        return json.loads(conn.getresponse().read())
+    finally:
+        conn.close()
+
+
+def _sample_single(rng: np.random.Generator) -> Dict[str, Any]:
+    """Bimodal request sizes: the rare heavy tail is what separates
+    size-aware placement from count-based rotation — blind rotation
+    balances *counts*, so a ~10x token spread between modes keeps its
+    token imbalance high even as the request count grows."""
+    if rng.random() < 0.1:  # heavy (~13x a light request's tokens)
+        prompt = int(rng.integers(24, 48))
+        gen = int(rng.integers(384, 640))
+    else:                   # light
+        prompt = int(rng.integers(4, 16))
+        gen = int(rng.integers(16, 40))
+    return {"prompt": prompt, "max_tokens": gen}
+
+
+def _drive_singles(router: FleetRouter, seed: int,
+                   errors: List[str]) -> List[threading.Thread]:
+    """Open loop: Poisson arrival times are wall sleeps; each arrival
+    fires an independent client thread (never waits for completions)."""
+    rng = np.random.default_rng(seed)
+    bodies = []
+    t = 0.0
+    while t < DURATION:
+        t += float(rng.exponential(1.0 / RATE))
+        bodies.append((t, _sample_single(rng)))
+
+    threads: List[threading.Thread] = []
+
+    def client(body: Dict[str, Any]) -> None:
+        try:
+            status, _ = _post(router.host, router.port,
+                              "/v1/completions", body)
+            if status != 200:
+                errors.append(f"single -> {status}")
+        except Exception as e:            # surface, never die silently
+            errors.append(f"single -> {e!r}")
+
+    start = time.monotonic()
+    for t_arr, body in bodies:
+        delay = start + t_arr - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        th = threading.Thread(target=client, args=(body,), daemon=True)
+        th.start()
+        threads.append(th)
+    return threads
+
+
+def _drive_sessions(router: FleetRouter, seed: int,
+                    errors: List[str]) -> List[threading.Thread]:
+    """Closed loop per session (a turn needs the previous reply), open
+    loop across sessions (Poisson starts)."""
+    rng = np.random.default_rng(seed + 1)
+    starts = np.sort(rng.uniform(0.0, DURATION * 0.6, size=N_SESSIONS))
+
+    def session(sid: int, start_at: float, words: int) -> None:
+        time.sleep(start_at)
+        msgs = [{"role": "user",
+                 "content": " ".join(f"w{sid}t0i{j}"
+                                     for j in range(words))}]
+        for turn in range(N_TURNS):
+            try:
+                status, raw = _post(router.host, router.port,
+                                    "/v1/chat/completions",
+                                    {"messages": msgs, "max_tokens": 24,
+                                     "session": sid})
+                if status != 200:
+                    errors.append(f"session {sid} turn {turn} -> {status}")
+                    return
+                reply = json.loads(raw)["choices"][0]["message"]
+            except Exception as e:        # surface, never die silently
+                errors.append(f"session {sid} turn {turn} -> {e!r}")
+                return
+            msgs.append({"role": reply["role"],
+                         "content": reply["content"]})
+            msgs.append({"role": "user",
+                         "content": " ".join(f"w{sid}t{turn + 1}i{j}"
+                                             for j in range(8))})
+
+    threads = []
+    for i, s in enumerate(starts):
+        words = int(rng.integers(6, 18))
+        th = threading.Thread(target=session,
+                              args=(1000 + i, float(s), words),
+                              daemon=True)
+        th.start()
+        threads.append(th)
+    return threads
+
+
+def run_arm(placer: str, seed: int = 0) -> Dict[str, Any]:
+    fronts = _build_instances(seed0=seed)
+    errors: List[str] = []
+    try:
+        with FleetRouter(tuple(f.url for f in fronts), placer=placer,
+                         poll_interval=POLL_INTERVAL) as router:
+            threads = _drive_singles(router, seed, errors)
+            threads += _drive_sessions(router, seed, errors)
+            for th in threads:
+                th.join(timeout=120.0)
+            stats = router.stats()
+            health = router.health()
+    finally:
+        for f in fronts:
+            f.shutdown()
+    if errors:
+        raise AssertionError(f"{placer}: {len(errors)} failed requests: "
+                             f"{errors[:3]}")
+    served = {u: int(v) for u, v in stats["served_tokens"].items()}
+    return dict(
+        placer=placer,
+        n_requests=stats["n_requests"],
+        placements=stats["placements"],
+        served_tokens=served,
+        total_served=sum(served.values()),
+        imbalance=round(imbalance(served), 4),
+        reprefill_tokens=stats["reprefill_tokens"],
+        migrations=stats["migrations"],
+        n_instances=health["n_instances"])
+
+
+def main() -> None:
+    print(f"[bench_fleet] {N_INSTANCES} instances x {len(ARMS)} arms, "
+          f"rate={RATE}/s x {DURATION}s + {N_SESSIONS} sessions x "
+          f"{N_TURNS} turns (smoke={SMOKE})", flush=True)
+    rows = []
+    for arm in ARMS:
+        row = run_arm(arm)
+        rows.append(row)
+        print(f"[bench_fleet] {arm:>18}: {row['n_requests']} reqs, "
+              f"imbalance {row['imbalance']:.3f}, "
+              f"reprefill {row['reprefill_tokens']} tok, "
+              f"served {row['total_served']} tok", flush=True)
+
+    by = {r["placer"]: r for r in rows}
+    rr, aff = by["round_robin"], by["retention_affinity"]
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = dict(
+        meta=dict(n_instances=N_INSTANCES, time_scale=TIME_SCALE,
+                  rate=RATE, duration=DURATION, n_sessions=N_SESSIONS,
+                  n_turns=N_TURNS, smoke=SMOKE,
+                  poll_interval=POLL_INTERVAL),
+        arms=rows,
+        asserts=dict(
+            imbalance_affinity_le_round_robin=(
+                aff["imbalance"] <= rr["imbalance"]),
+            reprefill_affinity_le_round_robin=(
+                aff["reprefill_tokens"] <= rr["reprefill_tokens"])))
+    path = os.path.join(OUT_DIR, "BENCH_fleet.json")
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"[bench_fleet] wrote {path}")
+    print("placer,n_requests,imbalance,reprefill_tokens,total_served")
+    for r in rows:
+        print(f"{r['placer']},{r['n_requests']},{r['imbalance']},"
+              f"{r['reprefill_tokens']},{r['total_served']}")
+
+    # ---- the PR 9 acceptance bar -------------------------------------
+    # same workload, so total served tokens must agree across arms
+    totals = [r["total_served"] for r in rows]
+    assert max(totals) - min(totals) <= 0.02 * max(totals), \
+        f"arms served different workloads: {totals}"
+    # retention affinity must balance served tokens at least as well as
+    # blind rotation...
+    assert aff["imbalance"] <= rr["imbalance"], \
+        (f"retention_affinity imbalance {aff['imbalance']} worse than "
+         f"round_robin {rr['imbalance']}")
+    # ...and pay less §3.3 re-prefill (round robin migrates nearly every
+    # turn; the pin keeps sessions home)
+    assert rr["reprefill_tokens"] > 0, \
+        "round robin never migrated a session: workload too small"
+    assert aff["reprefill_tokens"] <= rr["reprefill_tokens"], \
+        (f"retention_affinity reprefill {aff['reprefill_tokens']} worse "
+         f"than round_robin {rr['reprefill_tokens']}")
+    print("[bench_fleet] PASS: retention_affinity <= round_robin on "
+          "imbalance and reprefill_tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,10 +27,11 @@ from repro.analysis.framework import AnalysisPass, Finding, SourceFile, register
 class ApiTypingPass(AnalysisPass):
     name = "api-typing"
     description = ("functions and methods in repro.kvcache / repro.serving "
-                   "must have fully annotated signatures (params + return)")
+                   "/ repro.fleet must have fully annotated signatures "
+                   "(params + return)")
     hint = ("annotate every parameter and the return type — this package "
             "ships py.typed and CI runs mypy --disallow-untyped-defs on it")
-    targets = ("src/repro/kvcache", "src/repro/serving")
+    targets = ("src/repro/kvcache", "src/repro/serving", "src/repro/fleet")
 
     def check_file(self, sf: SourceFile) -> Iterable[Finding]:
         assert sf.tree is not None

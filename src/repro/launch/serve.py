@@ -112,8 +112,9 @@ def serve_http(cfg: ServingConfig, server: SliceServer, vocab: int) -> None:
     from repro.serving import HTTPFrontend
 
     model_name = cfg.arch if cfg.backend == "real" else "scls-sim"
-    front = HTTPFrontend(server.aio, port=cfg.http_port,
-                         model_name=model_name, vocab_size=vocab)
+    front = HTTPFrontend(server.aio, host=cfg.http_host,
+                         port=cfg.http_port, model_name=model_name,
+                         vocab_size=vocab)
     front.start()
     print(f"[serve] http listening on {front.url} "
           f"(model={model_name}, slo_ms={cfg.slo_ms}, "

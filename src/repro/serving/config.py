@@ -88,6 +88,8 @@ class ServingConfig:
     duration: float = 15.0
     # --- online front end (repro.serving.{aio,admission,http}) ---
     http_port: Optional[int] = None      # None = no HTTP endpoint
+    http_host: str = "127.0.0.1"         # bind host (fleet: several
+                                         # instances + router on one box)
     slo_ms: Optional[float] = None       # default per-request SLO (admission)
     time_scale: Optional[float] = None   # sim pacing: virtual s per wall s
     # --- observability (repro.obs) ---
@@ -168,6 +170,9 @@ class ServingConfig:
         if self.http_port is not None and not 0 <= self.http_port <= 65535:
             raise ValueError(f"http_port must be in [0, 65535] (0 = "
                              f"ephemeral), got {self.http_port}")
+        if not isinstance(self.http_host, str) or not self.http_host.strip():
+            raise ValueError(f"http_host must be a non-empty bind host, "
+                             f"got {self.http_host!r}")
         if self.slo_ms is not None and self.slo_ms <= 0:
             raise ValueError(f"slo_ms must be positive, got {self.slo_ms}")
         if self.time_scale is not None:
@@ -245,6 +250,10 @@ class ServingConfig:
                         help="serve an OpenAI-compatible HTTP endpoint on "
                              "this port (0 = ephemeral) instead of the "
                              "trace-replay demo")
+        ap.add_argument("--http-host", default=cls.http_host,
+                        help="bind host for --http-port (default "
+                             "127.0.0.1; several instances plus the fleet "
+                             "router share one box by port)")
         ap.add_argument("--slo-ms", type=float, default=cls.slo_ms,
                         help="default per-request SLO for admission control "
                              "(requests predicted to miss it get 429)")

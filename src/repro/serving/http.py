@@ -66,7 +66,7 @@ from typing import Any, Coroutine, Dict, List, Optional
 
 import numpy as np
 
-from repro.serving.admission import AdmissionRejected
+from repro.serving.admission import AdmissionRejected, predicted_queue_delay
 from repro.serving.aio import AsyncRequestHandle, AsyncSliceServer
 from repro.serving.backends import RealBackend, SimBackend
 from repro.serving.tokenizer import for_vocab, render_chat
@@ -238,6 +238,19 @@ class HTTPFrontend:
                 len(w.pending) + sum(b.size for b in w.queue)
                 for w in core.workers)
             snap["in_flight_slices"] = sum(1 for w in core.workers if w.busy)
+        # the full placement-input vector the fleet router's
+        # InstanceSnapshot parses (repro.fleet.registry): the Eq. 11
+        # per-worker loads and the Eq. 10–11 predicted queue delay the
+        # admission controller itself uses, plus memory/session
+        # residency for the retention_affinity migration-cost term
+        loads = core.offloader.snapshot()
+        snap["worker_loads"] = [loads[w] for w in sorted(loads)]
+        snap["min_load"] = core.offloader.min_load()
+        snap["queue_delay_est"] = predicted_queue_delay(core)
+        anchors = getattr(core.backend, "_session_anchor", None)
+        snap["n_sessions"] = len(anchors) if anchors is not None else 0
+        if core.obs.ins is not None:
+            snap["shared_blocks"] = int(core.obs.ins.shared_blocks.value())
         if isinstance(core.backend, RealBackend) \
                 and core.backend.allocators is not None:
             snap["free_blocks"] = core.backend.free_blocks()
@@ -381,12 +394,16 @@ class HTTPFrontend:
             return "stop"    # the model's own EOS ended the stream
         return "length"
 
-    def _retry_after_s(self, exc: AdmissionRejected) -> int:
+    def _retry_after_s(self, exc: AdmissionRejected) -> float:
         ra = exc.decision.retry_after or 1.0
         scale = self.aserver._time_scale
         if scale is not None:
-            ra = ra / scale  # core seconds -> wall seconds
-        elif isinstance(self.aserver.core.backend, SimBackend):
+            # core seconds -> wall seconds, the same mapping the pacer
+            # applies to submissions; a paced run legitimately suggests
+            # sub-second wall backoffs, so don't floor them to 1 —
+            # clamp to 1 ms and keep millisecond resolution instead
+            return round(max(ra / scale, 1e-3), 3)
+        if isinstance(self.aserver.core.backend, SimBackend):
             # unpaced sim: virtual backlog clears in ~zero wall time, so
             # a virtual-seconds header would over-throttle clients
             ra = 1.0

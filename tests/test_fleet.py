@@ -1,0 +1,402 @@
+"""repro.fleet: instance registry, placement policies, and the fleet
+router — lifecycle (join/drain/crash-evict), SSE passthrough, session
+pinning with migration accounting, and placement determinism."""
+import http.client
+import json
+
+import pytest
+
+from repro.fleet import (FleetRouter, InstanceRegistry, InstanceSnapshot,
+                         LeastLoadPlacer, PlacementRequest,
+                         RetentionAffinityPlacer, RoundRobinPlacer,
+                         imbalance, make_placer)
+from repro.serving import HTTPFrontend, ServingConfig
+
+SLICE = 8
+
+
+# ---------------------------------------------------------------------------
+# placement policies over synthetic snapshots (no HTTP)
+# ---------------------------------------------------------------------------
+def snap(url, delay=0.0, **kw):
+    return InstanceSnapshot(instance=url, healthy=True, polled_at=0.0,
+                            queue_delay_est=delay, **kw)
+
+
+def preq(rid, inp=8, gen=16, session=None, pinned=None, history=0):
+    return PlacementRequest(rid=rid, input_tokens=inp, max_tokens=gen,
+                            session_id=session, pinned=pinned,
+                            history_tokens=history)
+
+
+def test_round_robin_cycles_sorted_candidates():
+    p = RoundRobinPlacer()
+    cands = [snap("http://a"), snap("http://b"), snap("http://c")]
+    picks = [p.place(cands, preq(i)).instance for i in range(6)]
+    assert picks == ["http://a", "http://b", "http://c"] * 2
+
+
+def test_least_load_prefers_idle_and_decays_charges():
+    p = LeastLoadPlacer(token_time=0.01)
+    cands = [snap("http://a", delay=5.0), snap("http://b", delay=0.0)]
+    r = preq(1, inp=100, gen=100)         # 2.0 s estimated cost
+    assert p.place(cands, r).instance == "http://b"
+    # charge accumulates: after two placements b carries 4.0 s > a's 5?
+    assert p.place(cands, preq(2, inp=100, gen=100)).instance == "http://b"
+    # now b carries 4.0 s of charges; one more 2.0 s request still fits
+    # under a's 5.0 s poll, the next tips the balance to a
+    assert p.place(cands, preq(3, inp=100, gen=100)).instance == "http://b"
+    assert p.place(cands, preq(4, inp=100, gen=100)).instance == "http://a"
+    # completion subtracts the estimate back out (Offloader mirror)
+    p.on_complete("http://b", r)
+    p.on_complete("http://b", r)
+    p.on_complete("http://b", r)
+    assert p.place(cands, preq(5, inp=100, gen=100)).instance == "http://b"
+    # polls do NOT reset the ledger (charges persist until completion,
+    # like Offloader loads) — they only prune departed instances
+    p.observe(cands)
+    assert p._charges["http://b"] > 0.0
+    p.observe([snap("http://a", delay=5.0)])   # b evicted/drained
+    assert "http://b" not in p._charges
+
+
+def test_retention_affinity_pins_within_epsilon():
+    p = RetentionAffinityPlacer(token_time=0.01, epsilon=0.5)
+    cands = [snap("http://a", delay=0.4), snap("http://b", delay=0.0)]
+    # session pinned on the busier a; slack = 0.5*(1.0 + 0.6) = 0.8 > gap
+    got = p.place(cands, preq(1, inp=50, gen=50, session=9,
+                              pinned="http://a", history=60))
+    assert got.instance == "http://a"
+
+
+def test_retention_affinity_migrates_when_pin_overloaded():
+    p = RetentionAffinityPlacer(token_time=0.01, epsilon=0.25)
+    cands = [snap("http://a", delay=9.0), snap("http://b", delay=0.0)]
+    # slack = 0.25*(1.0 + 0.6) = 0.4 << 9.0 gap: the move pays off even
+    # after re-prefilling the 60-token history
+    got = p.place(cands, preq(1, inp=50, gen=50, session=9,
+                              pinned="http://a", history=60))
+    assert got.instance == "http://b"
+
+
+def test_retention_affinity_ignores_missing_pin():
+    p = RetentionAffinityPlacer()
+    cands = [snap("http://a"), snap("http://b")]
+    got = p.place(cands, preq(1, session=3, pinned="http://gone",
+                              history=100))
+    assert got.instance in ("http://a", "http://b")
+
+
+def test_placement_deterministic_under_seeded_registry():
+    """Same snapshots + same request sequence => identical placements
+    (the registry holds no RNG and iterates sorted; pinned here)."""
+    def run():
+        reg = InstanceRegistry(
+            ("http://a", "http://c", "http://b"),
+            fetch=lambda url: {"status": "ok", "queue_delay_est":
+                               {"http://a": 1.0, "http://b": 0.3,
+                                "http://c": 0.7}[url]})
+        reg.poll_once()
+        p = make_placer("retention_affinity", token_time=0.02)
+        seq = []
+        for i in range(12):
+            session = (i % 3) + 1 if i % 2 else None
+            pin = seq[-3][1] if session and len(seq) >= 3 else None
+            got = p.place(reg.placeable(),
+                          preq(i, inp=4 * i + 1, gen=8 * (i % 4 + 1),
+                               session=session, pinned=pin,
+                               history=16 * i))
+            seq.append((i, got.instance))
+        return seq
+
+    a, b = run(), run()
+    assert a == b
+    assert [u for _, u in a][0] == "http://b"  # least loaded first
+
+
+def test_registry_crash_eviction_after_consecutive_failures():
+    calls = {"n": 0}
+
+    def fetch(url):
+        if url == "http://dead":
+            raise OSError("connection refused")
+        return {"status": "ok"}
+
+    reg = InstanceRegistry(("http://live", "http://dead"),
+                           max_failures=2, fetch=fetch)
+    evicted = []
+    reg.on_evict(evicted.append)
+    assert reg.poll_once() == 1
+    # first failure: immediately unhealthy (skipped by placement)...
+    assert [s.instance for s in reg.placeable()] == ["http://live"]
+    assert "http://dead" in reg and not evicted
+    # ...second consecutive failure: evicted, callback fired
+    reg.poll_once()
+    assert evicted == ["http://dead"]
+    assert "http://dead" not in reg and len(reg) == 1
+
+
+def test_registry_drain_and_rejoin():
+    reg = InstanceRegistry(("http://a", "http://b"),
+                           fetch=lambda url: {"status": "ok"})
+    reg.poll_once()
+    assert reg.drain("http://a")
+    assert [s.instance for s in reg.placeable()] == ["http://b"]
+    assert len(reg) == 2          # drained, not removed
+    assert reg.join("http://a")   # rejoin reactivates
+    assert [s.instance for s in reg.placeable()] == ["http://a",
+                                                     "http://b"]
+    assert not reg.drain("http://nope")
+
+
+def test_imbalance_metric():
+    assert imbalance({}) == 1.0
+    assert imbalance({"a": 100, "b": 100}) == 1.0
+    assert imbalance({"a": 300, "b": 100}) == 3.0
+    assert imbalance({"a": 300, "b": 0}) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# the router over real (sim-backend) instances
+# ---------------------------------------------------------------------------
+def _build_instance(seed=0, time_scale=None, **cfg_kw):
+    cfg = ServingConfig(strategy="scls", workers=2, slice_len=SLICE,
+                        gamma=0.25, seed=seed, time_scale=time_scale,
+                        **cfg_kw)
+    return HTTPFrontend(cfg.build_sim().aio, port=0).start()
+
+
+@pytest.fixture(scope="module")
+def pair():
+    fronts = [_build_instance(seed=i) for i in range(2)]
+    yield fronts
+    for f in fronts:
+        f.shutdown()
+
+
+def _request(host, port, method, path, body=None, timeout=60):
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    headers = {"Content-Type": "application/json"} if body is not None else {}
+    conn.request(method, path,
+                 json.dumps(body) if body is not None else None, headers)
+    resp = conn.getresponse()
+    raw = resp.read()
+    conn.close()
+    return resp, raw
+
+
+def _rjson(router, method, path, body=None):
+    resp, raw = _request(router.host, router.port, method, path, body)
+    return resp, json.loads(raw)
+
+
+def test_router_routes_and_reports(pair):
+    with FleetRouter(tuple(f.url for f in pair), placer="round_robin",
+                     poll_interval=0.2) as router:
+        for i in range(4):
+            resp, out = _rjson(router, "POST", "/v1/completions",
+                               {"prompt": f"req {i}", "max_tokens": 8})
+            assert resp.status == 200
+            assert out["object"] == "text_completion"
+        resp, health = _rjson(router, "GET", "/healthz")
+        assert health["role"] == "router"
+        assert health["n_instances"] == health["n_placeable"] == 2
+        rows = {r["url"]: r for r in health["instances"]}
+        assert set(rows) == {f.url for f in pair}
+        # the /healthz placement vector flowed into the snapshots
+        assert all("queue_delay_est" in r for r in rows.values())
+        resp, stats = _rjson(router, "GET", "/metrics.json")
+        # round robin: 4 requests alternate 2/2 across the instances
+        assert sorted(stats["placements"].values()) == [2, 2]
+        assert sum(stats["served_tokens"].values()) > 0
+        resp, raw = _request(router.host, router.port, "GET", "/metrics")
+        assert b"scls_fleet_requests_total" in raw
+        resp, audit = _rjson(router, "GET", "/debug/placements")
+        assert audit["n_recorded"] == 4
+        assert all(ev["kind"] == "fleet_place" for ev in audit["events"])
+
+
+def test_router_passes_429_retry_after_verbatim(pair):
+    body = {"prompt": 512, "max_tokens": 900, "slo_ms": 1}
+    direct_resp, _ = _request(pair[0].host, pair[0].port, "POST",
+                              "/v1/completions", body)
+    assert direct_resp.status == 429
+    with FleetRouter((pair[0].url,), placer="round_robin",
+                     poll_interval=5.0) as router:
+        resp, out = _rjson(router, "POST", "/v1/completions", body)
+        assert resp.status == 429
+        assert out["error"]["type"] == "rate_limit_exceeded"
+        # verbatim passthrough: byte-identical to the instance's header
+        assert resp.getheader("Retry-After") == \
+            direct_resp.getheader("Retry-After")
+
+
+def test_router_join_endpoint_adds_instance(pair):
+    extra = _build_instance(seed=5)
+    try:
+        with FleetRouter((pair[0].url,), placer="round_robin",
+                         poll_interval=5.0) as router:
+            resp, health = _rjson(router, "GET", "/healthz")
+            assert health["n_instances"] == 1
+            resp, out = _rjson(router, "POST", "/fleet/join",
+                               {"url": extra.url})
+            assert resp.status == 200 and out["healthy"]
+            resp, health = _rjson(router, "GET", "/healthz")
+            assert health["n_instances"] == health["n_placeable"] == 2
+            # round robin now reaches the joined instance
+            for i in range(2):
+                resp, _ = _rjson(router, "POST", "/v1/completions",
+                                 {"prompt": "after join",
+                                  "max_tokens": 4})
+                assert resp.status == 200
+            _, stats = _rjson(router, "GET", "/metrics.json")
+            assert extra.url in stats["placements"]
+    finally:
+        extra.shutdown()
+
+
+def test_drain_finishes_inflight_sse_and_stops_placement():
+    """Drain while an SSE stream is in flight: the stream runs to [DONE]
+    on its own socket; every subsequent request lands elsewhere."""
+    fronts = [_build_instance(seed=i, time_scale=4.0) for i in range(2)]
+    try:
+        with FleetRouter(tuple(f.url for f in fronts),
+                         placer="round_robin",
+                         poll_interval=0.2) as router:
+            conn = http.client.HTTPConnection(router.host, router.port,
+                                              timeout=60)
+            conn.request("POST", "/v1/completions",
+                         json.dumps({"prompt": "drain me",
+                                     "max_tokens": 48, "stream": True}),
+                         {"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            first = resp.fp.readline()   # stream is live
+            assert first.startswith(b"data: ")
+            # find where it was placed, drain that instance mid-stream
+            _, audit = _rjson(router, "GET", "/debug/placements")
+            placed = audit["events"][0]["instance"]
+            r2, out = _rjson(router, "POST", "/fleet/drain",
+                             {"url": placed})
+            assert r2.status == 200
+            rest = resp.read()
+            conn.close()
+            assert b"data: [DONE]" in first + rest   # finished cleanly
+            other = next(f.url for f in fronts if f.url != placed)
+            for i in range(3):
+                r3, _ = _rjson(router, "POST", "/v1/completions",
+                               {"prompt": "post drain", "max_tokens": 4})
+                assert r3.status == 200
+            _, stats = _rjson(router, "GET", "/metrics.json")
+            assert stats["placements"][other] == 3
+            assert stats["placements"].get(placed, 0) == 1
+            _, health = _rjson(router, "GET", "/healthz")
+            assert health["n_instances"] == 2       # drained, not gone
+            assert health["n_placeable"] == 1
+    finally:
+        for f in fronts:
+            f.shutdown()
+
+
+def test_crash_evict_replaces_exactly_once():
+    """Kill an instance: a request placed on it is re-placed exactly
+    once on the survivor (no duplicate submission), and the dead
+    instance is evicted from the registry."""
+    fronts = [_build_instance(seed=i) for i in range(2)]
+    by_url = {f.url: f for f in fronts}
+    dead_url = sorted(by_url)[0]        # round robin hits this first
+    live = by_url[sorted(by_url)[1]]
+    try:
+        with FleetRouter(tuple(by_url), placer="round_robin",
+                         poll_interval=30.0, max_failures=1) as router:
+            # hard-kill the listener (connection refused from now on)
+            by_url[dead_url]._httpd.shutdown()
+            by_url[dead_url]._httpd.server_close()
+            resp, out = _rjson(router, "POST", "/v1/completions",
+                               {"prompt": "crash path", "max_tokens": 8})
+            assert resp.status == 200      # re-placed on the survivor
+            _, stats = _rjson(router, "GET", "/metrics.json")
+            assert stats["retries"] == 1
+            assert stats["evictions"] == 1  # max_failures=1: instant
+            # placements counts *decisions* (the failed attempt on the
+            # dead instance included); tokens only flowed to the live one
+            assert stats["placements"][live.url] == 1
+            assert list(stats["served_tokens"]) == [live.url]
+            _, health = _rjson(router, "GET", "/healthz")
+            assert health["n_instances"] == 1
+            # exactly-once: the fleet saw a single submission for the
+            # single client request
+            _, snap = _rjson(live, "GET", "/healthz")
+            assert snap["n_submitted"] == 1
+    finally:
+        for f in fronts:
+            try:
+                f.shutdown()
+            except Exception:
+                pass
+
+
+def test_session_pinning_and_migration_reprefill(pair):
+    with FleetRouter(tuple(f.url for f in pair),
+                     placer="retention_affinity",
+                     poll_interval=0.2) as router:
+        msgs = [{"role": "user", "content": "first turn of the chat"}]
+        for turn in range(2):
+            resp, out = _rjson(router, "POST", "/v1/chat/completions",
+                               {"messages": msgs, "max_tokens": 8,
+                                "session": 42})
+            assert resp.status == 200
+            msgs.append(out["choices"][0]["message"])
+            msgs.append({"role": "user", "content": f"turn {turn + 2}"})
+        _, audit = _rjson(router, "GET", "/debug/placements")
+        turns = [ev for ev in audit["events"] if ev["session"] == 42]
+        assert len(turns) == 2
+        assert turns[0]["instance"] == turns[1]["instance"]   # pinned
+        assert turns[1]["pinned"] == turns[0]["instance"]
+        assert not turns[1]["migrated"]
+        _, stats = _rjson(router, "GET", "/metrics.json")
+        assert stats["reprefill_tokens"] == 0
+        # drain the pinned instance: the next turn must migrate and pay
+        # the history re-prefill (pinned-with-override)
+        _rjson(router, "POST", "/fleet/drain",
+               {"url": turns[0]["instance"]})
+        resp, out = _rjson(router, "POST", "/v1/chat/completions",
+                           {"messages": msgs, "max_tokens": 8,
+                            "session": 42})
+        assert resp.status == 200
+        _, stats = _rjson(router, "GET", "/metrics.json")
+        assert stats["migrations"] == 1
+        assert stats["reprefill_tokens"] > 0
+        _, audit = _rjson(router, "GET", "/debug/placements")
+        last = audit["events"][-1]
+        assert last["migrated"] and last["instance"] != turns[0]["instance"]
+        # release through the router: pin + history bookkeeping drop
+        resp, out = _rjson(router, "DELETE", "/v1/sessions/42")
+        assert resp.status == 200 and out["released"]
+        _, stats = _rjson(router, "GET", "/metrics.json")
+        assert stats["sessions"] == 0
+
+
+def test_router_503_when_no_instance(pair):
+    with FleetRouter((), placer="least_load",
+                     poll_interval=5.0) as router:
+        resp, out = _rjson(router, "POST", "/v1/completions",
+                           {"prompt": "nowhere to go", "max_tokens": 4})
+        assert resp.status == 503
+        assert resp.getheader("Retry-After") == "1"
+        resp, _ = _rjson(router, "POST", "/fleet/drain",
+                         {"url": "http://127.0.0.1:1"})
+        assert resp.status == 404
+
+
+# ---------------------------------------------------------------------------
+# ServingConfig --http-host (fleet satellite)
+# ---------------------------------------------------------------------------
+def test_http_host_validated_and_parsed():
+    with pytest.raises(ValueError, match="http_host"):
+        ServingConfig(http_host="")
+    with pytest.raises(ValueError, match="http_host"):
+        ServingConfig(http_host="   ")
+    cfg = ServingConfig.from_cli(["--http-host", "0.0.0.0",
+                                  "--http-port", "0", "--backend", "sim"])
+    assert cfg.http_host == "0.0.0.0" and cfg.http_port == 0
+    assert ServingConfig().http_host == "127.0.0.1"

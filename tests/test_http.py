@@ -108,6 +108,41 @@ def test_unmeetable_slo_rejected_with_429_before_any_work(frontend):
     assert m["reject_reasons"].get("deadline", 0) >= 1  # per-reason counts
 
 
+def test_healthz_exports_fleet_placement_vector(frontend):
+    """The fleet router's InstanceSnapshot parses these fields
+    (repro.fleet.registry) — the Eq. 10–11 load terms plus residency."""
+    resp, raw = _request(frontend, "GET", "/healthz")
+    snap = json.loads(raw)
+    assert len(snap["worker_loads"]) == snap["workers"]
+    assert all(isinstance(x, float) and x >= 0
+               for x in snap["worker_loads"])
+    assert snap["min_load"] == min(snap["worker_loads"])
+    assert isinstance(snap["queue_delay_est"], float)
+    assert snap["queue_delay_est"] >= snap["min_load"]
+    assert snap["n_sessions"] == 0       # sim backend anchors nothing
+    assert snap["shared_blocks"] == 0
+    # the admission counters ride along (cumulative placement inputs)
+    assert snap["n_submitted"] >= 0 and snap["n_rejected"] >= 0
+
+
+def test_paced_retry_after_keeps_subsecond_hints():
+    """Regression: a paced (time_scale) run maps the core-seconds retry
+    hint through the same virtual->wall scaling as submissions — a
+    sub-second wall hint must not be floored up to 1s."""
+    server = ServingConfig(strategy="scls", workers=2, slice_len=SLICE,
+                           gamma=0.25, time_scale=1000.0).build_sim()
+    front = HTTPFrontend(server.aio, port=0).start()
+    try:
+        resp, raw = _request(front, "POST", "/v1/completions",
+                             {"prompt": 512, "max_tokens": 900,
+                              "slo_ms": 1})
+        assert resp.status == 429
+        ra = float(resp.getheader("Retry-After"))
+        assert 0 < ra < 1       # ~60 core-s backlog / 1000x pacing
+    finally:
+        front.shutdown()
+
+
 def test_meetable_slo_accepted(frontend):
     resp, raw = _request(frontend, "POST", "/v1/completions",
                          {"prompt": "quick one", "max_tokens": 8,
