@@ -3,19 +3,26 @@
 On this CPU container, interpret-mode timings measure the kernel *body
 semantics*, not TPU performance — the roofline table (EXPERIMENTS.md) is
 the performance source of truth.  This bench (a) proves the kernels run,
-(b) times the XLA reference path that the engines actually execute on CPU.
+(b) times the XLA reference path that the engines actually execute on CPU,
+(c) times the PR-10 fused RoPE+paged-KV arms against their unfused
+multi-pass pipelines, asserting token-exactness against the jnp oracles,
+and emits bench_results/BENCH_kernels.json (CI uploads it as an artifact).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
+from functools import partial
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import OUT_DIR, emit
 from repro.kernels import ops
+from repro.models.common import apply_rope
 
 
 def _time(fn, *args, repeats=3, **kw):
@@ -58,5 +65,156 @@ def bench_kernels() -> List[Dict]:
     b = ops.prefill_attention(q, k, v, pos, impl="xla")
     rows.append(dict(kernel="flash_prefill", shape="pallas_interp_check",
                      impl="pallas", us_per_call=float(jnp.abs(a - b).max())))
+    rows += bench_fused_kernels()
     emit(rows, "kernels")
+    summary = _fused_summary(rows)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump({"rows": rows, "fused_vs_unfused": summary}, f, indent=2)
+    print(f"[bench_kernels] -> {path}")
     return rows
+
+
+# ---------------------------------------------------------------------------
+# PR 10: fused RoPE + paged-KV arms vs their unfused multi-pass pipelines
+# ---------------------------------------------------------------------------
+def _fused_write_inputs(B, T, pg, Hkv, D, seed=7):
+    """Full left-aligned prefill rows over disjoint block tables (the
+    allocator contract: only null page 0 is ever shared)."""
+    key = jax.random.PRNGKey(seed)
+    nb = T // pg
+    P = B * nb + 1
+    k_new = jax.random.normal(key, (B, T, Hkv, D))
+    v_new = jax.random.normal(jax.random.fold_in(key, 1), (B, T, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32)
+    bt = jnp.asarray(np.random.default_rng(seed)
+                     .permutation(np.arange(1, P)).reshape(B, nb), jnp.int32)
+    kp = jax.random.normal(jax.random.fold_in(key, 2), (P, pg, Hkv, D))
+    vp = jax.random.normal(jax.random.fold_in(key, 3), (P, pg, Hkv, D))
+    return k_new, v_new, pos, bt, kp, vp
+
+
+def _fused_decode_inputs(B, W, pg, Hq, Hkv, D, seed=9):
+    """Mid-decode pool: W resident tokens per row, new token at slot W."""
+    key = jax.random.PRNGKey(seed)
+    nb = -(-(W + 1) // pg)
+    P = B * nb + 1
+    kp = jax.random.normal(key, (P, pg, Hkv, D))
+    vp = jax.random.normal(jax.random.fold_in(key, 1), (P, pg, Hkv, D))
+    bt = jnp.asarray(np.random.default_rng(seed)
+                     .permutation(np.arange(1, P)).reshape(B, nb), jnp.int32)
+    slot_pos = np.full((B, nb * pg), -1, np.int32)
+    slot_pos[:, :W + 1] = np.arange(W + 1)
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, Hq, D))
+    kn = jax.random.normal(jax.random.fold_in(key, 3), (B, Hkv, D))
+    vn = jax.random.normal(jax.random.fold_in(key, 4), (B, Hkv, D))
+    s = jnp.full((B,), W, jnp.int32)
+    return q, kn, vn, bt, jnp.asarray(slot_pos), s, s, kp, vp
+
+
+@jax.jit
+def _unfused_write_two_pass(k_new, v_new, pos, bt, kp, vp):
+    """The pre-PR-10 pipeline: a jnp RoPE pass over prefill K, then a
+    separate paged scatter — two reads of K, one of the pool."""
+    k_rot = apply_rope(k_new, jnp.maximum(pos, 0), 10000.0)
+    return ops.paged_prefill_write(k_rot, v_new, pos, bt, kp, vp, impl="xla")
+
+
+@partial(jax.jit, static_argnames=("pg",))
+def _unfused_decode_three_pass(q, kn, vn, bt, slot_pos, slots, q_pos, kp, vp,
+                               pg):
+    """The pre-PR-10 pipeline: rotate q/k, scatter the token's K/V into
+    its page slot, then run paged decode attention — three launches."""
+    qr = apply_rope(q[:, None], q_pos[:, None], 10000.0)[:, 0]
+    kr = apply_rope(kn[:, None], q_pos[:, None], 10000.0)[:, 0]
+    pages = bt[jnp.arange(q.shape[0]), slots // pg]
+    uk = kp.at[pages, slots % pg].set(kr)
+    uv = vp.at[pages, slots % pg].set(vn)
+    out = ops.paged_decode_attention(qr, uk, uv, bt, slot_pos, q_pos,
+                                     impl="xla")
+    return out, uk, uv
+
+
+def bench_fused_kernels() -> List[Dict]:
+    rows = []
+    for (B, T, pg, Hkv, D) in [(4, 256, 16, 2, 64), (2, 1024, 16, 8, 64)]:
+        args = _fused_write_inputs(B, T, pg, Hkv, D)
+        fused = partial(ops.fused_rope_prefill_write, impl="xla")
+        # token-exactness: the one-pass fusion vs the two-pass pipeline,
+        # both ultimately pinned to the jnp oracle (impl="xla" IS
+        # ref.fused_rope_prefill_write_ref)
+        fk, fv = fused(*args)
+        uk, uv = _unfused_write_two_pass(*args)
+        assert np.allclose(np.asarray(fk), np.asarray(uk), atol=2e-5), \
+            "fused prefill write diverged from the unfused two-pass K"
+        assert np.array_equal(np.asarray(fv), np.asarray(uv)), \
+            "fused prefill write must leave V bit-exact"
+        shape = f"B{B}xT{T}xpg{pg}xkv{Hkv}xD{D}"
+        rows.append(dict(kernel="fused_rope_prefill_write", shape=shape,
+                         impl="xla_unfused_2pass",
+                         us_per_call=round(_time(_unfused_write_two_pass,
+                                                 *args), 1)))
+        rows.append(dict(kernel="fused_rope_prefill_write", shape=shape,
+                         impl="xla_fused",
+                         us_per_call=round(_time(fused, *args), 1)))
+    for (B, W, pg, Hq, Hkv, D) in [(8, 1023, 16, 8, 2, 64),
+                                   (32, 2047, 16, 8, 1, 64)]:
+        args = _fused_decode_inputs(B, W, pg, Hq, Hkv, D)
+        fused = partial(ops.fused_rope_decode_append, impl="xla")
+        fo, fk, fv = fused(*args)
+        uo, uk, uv = _unfused_decode_three_pass(*args, pg=pg)
+        assert np.allclose(np.asarray(fo), np.asarray(uo), atol=2e-5), \
+            "fused decode append diverged from the unfused attention output"
+        assert np.allclose(np.asarray(fk), np.asarray(uk), atol=2e-5)
+        assert np.array_equal(np.asarray(fv), np.asarray(uv)), \
+            "fused decode append must leave V bit-exact"
+        shape = f"B{B}xW{W}xpg{pg}xH{Hq}kv{Hkv}xD{D}"
+        rows.append(dict(kernel="fused_rope_decode_append", shape=shape,
+                         impl="xla_unfused_3pass",
+                         us_per_call=round(_time(_unfused_decode_three_pass,
+                                                 *args, pg=pg), 1)))
+        rows.append(dict(kernel="fused_rope_decode_append", shape=shape,
+                         impl="xla_fused",
+                         us_per_call=round(_time(fused, *args), 1)))
+    # interpret-mode kernel-body checks vs the jnp oracles (tiny shapes)
+    wargs = _fused_write_inputs(2, 16, 8, 2, 16)
+    pk, pv = ops.fused_rope_prefill_write(*wargs, impl="pallas")
+    ok, ov = ops.fused_rope_prefill_write(*wargs, impl="xla")
+    err = max(float(jnp.abs(pk - ok).max()), float(jnp.abs(pv - ov).max()))
+    assert err < 2e-5, f"fused prefill write pallas body drifted: {err}"
+    rows.append(dict(kernel="fused_rope_prefill_write",
+                     shape="pallas_interp_check", impl="pallas",
+                     us_per_call=err))
+    dargs = _fused_decode_inputs(2, 15, 8, 4, 2, 16)
+    po, pk, pv = ops.fused_rope_decode_append(*dargs, impl="pallas")
+    oo, ok, ov = ops.fused_rope_decode_append(*dargs, impl="xla")
+    err = max(float(jnp.abs(po - oo).max()), float(jnp.abs(pk - ok).max()),
+              float(jnp.abs(pv - ov).max()))
+    assert err < 2e-5, f"fused decode append pallas body drifted: {err}"
+    rows.append(dict(kernel="fused_rope_decode_append",
+                     shape="pallas_interp_check", impl="pallas",
+                     us_per_call=err))
+    return rows
+
+
+def _fused_summary(rows: List[Dict]) -> List[Dict]:
+    out = []
+    for kernel in ("fused_rope_prefill_write", "fused_rope_decode_append"):
+        shapes = {r["shape"] for r in rows
+                  if r["kernel"] == kernel and r["impl"].startswith("xla_")}
+        for shape in sorted(shapes):
+            sub = {r["impl"]: r["us_per_call"] for r in rows
+                   if r["kernel"] == kernel and r["shape"] == shape}
+            unfused = next(v for k, v in sub.items() if "unfused" in k)
+            out.append({"kernel": kernel, "shape": shape,
+                        "unfused_us": unfused, "fused_us": sub["xla_fused"],
+                        "speedup": round(unfused / max(sub["xla_fused"],
+                                                       1e-9), 3)})
+    return out
+
+
+if __name__ == "__main__":
+    for r in bench_kernels():
+        print(f"[bench_kernels] {r['kernel']:26s} {r['shape']:24s} "
+              f"{r['impl']:18s} {r['us_per_call']}")

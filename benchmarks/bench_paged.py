@@ -35,6 +35,11 @@ binds the batch size long before compute does):
    per-slice latency; token streams are asserted identical and
    reprefill_tokens == 0 for the retained run.  Emits
    bench_results/BENCH_paged_retain.json (CI uploads it as an artifact).
+
+4. Batch packing (default, PR 10): the Eq. 5–9 batch-max bound vs the
+   envelope-exact per-request block sum under the same paged budget —
+   peak admissible parallelism (asserted strictly higher) plus an
+   end-to-end sim ladder.  Emits bench_results/BENCH_paged.json.
 """
 from __future__ import annotations
 
@@ -256,9 +261,103 @@ def bench_paged_retain(n_requests: int = 8, gen_len: int = 24,
     return out
 
 
+def bench_paged_packing(duration: float = None, rate: float = RATE,
+                        n_workers: int = N_WORKERS, seed: int = 1):
+    """Eq. 5–9 batch-max bound vs PR-10 envelope-exact packing, same paged
+    budget (bench_results/BENCH_paged.json).
+
+    Two measurements per workload:
+
+    1. Peak admissible parallelism (deterministic): the largest batch the
+       memory bound admits from one sorted burst backlog.  Batch-max
+       charges every member the longest envelope (N x blocks_max), the
+       envelope mode the exact per-request sum — so its feasible set is a
+       strict superset and the peak batch is asserted strictly higher.
+    2. Sim ladder: the same open-loop trace through the central SCLS
+       scheduler under each packing mode; Algorithm 1 stays time-optimal
+       over the (larger) feasible set, so total estimated time — and in
+       practice throughput — only improves.
+    """
+    import json
+    import os
+    duration = duration or DURATION
+    true_lat = a100_llama13b_profile()
+    est = fitted_estimator(true_lat)
+    from repro.core.batcher import dp_batch
+
+    def _mem():
+        return PagedMemoryEstimator(delta_bytes=LLAMA2_13B_DELTA,
+                                    m_available=MEM_AVAILABLE,
+                                    page_tokens=PAGE_TOKENS, zeta=ZETA)
+
+    rows, sim_rows = [], []
+    for wl_name, spec in WORKLOADS.items():
+        # -- 1. largest bound-admissible batch on one burst backlog ------
+        burst = sorted(generate_trace(60.0, 5.0, spec, seed=seed),
+                       key=lambda r: r.effective_input_len)
+        mem = _mem()
+        peak = {}
+        n_bm = 0
+        for N in range(1, len(burst) + 1):
+            if not mem.fits(N, burst[N - 1].effective_input_len, SLICE):
+                break
+            n_bm = N
+        peak["batch-max"] = n_bm
+        n_env, total = 0, 0
+        for N, r in enumerate(burst, 1):
+            total += mem.blocks_per_request(r.effective_input_len, SLICE)
+            if not mem.fits_envelope(total):
+                break
+            n_env = N
+        peak["envelope"] = n_env
+        t_part = {p: sum(b.est_time for b in
+                         dp_batch(list(burst), SLICE, est, _mem(), packing=p))
+                  for p in ("batch-max", "envelope")}
+        for p in ("batch-max", "envelope"):
+            rows.append({"workload": wl_name, "packing": p,
+                         "backlog": len(burst),
+                         "peak_admissible_batch": peak[p],
+                         "partition_est_time_s": round(t_part[p], 3)})
+            print(f"[bench_paged:packing] {wl_name:9s} {p:9s} "
+                  f"peak_admissible={peak[p]:3d}  "
+                  f"partition_time={t_part[p]:8.3f}s")
+        assert peak["envelope"] > peak["batch-max"], \
+            f"{wl_name}: the exact envelope sum must admit a strictly " \
+            f"larger peak batch than N x blocks_max under the same budget"
+        assert t_part["envelope"] <= t_part["batch-max"] + 1e-9, \
+            f"{wl_name}: a superset feasible set cannot cost the DP time"
+        # -- 2. end-to-end sim ladder ------------------------------------
+        trace = generate_trace(rate, duration, spec, seed=seed)
+        for packing in ("batch-max", "envelope"):
+            s = make_strategy("scls", slice_len=SLICE, max_gen=MAX_GEN,
+                              gamma=3.0, kv_layout="paged", packing=packing)
+            sim = ClusterSimulator(s, n_workers, true_lat, est, _mem(),
+                                   noise_sigma=0.02, seed=seed + 1)
+            m = sim.run(copy.deepcopy(trace), duration).metrics
+            sim_rows.append({"workload": wl_name, "packing": packing,
+                             "throughput": round(m.throughput, 4),
+                             "peak_parallel": sim.peak_parallel,
+                             "avg_batch_size": round(m.avg_batch_size, 2),
+                             "mean_response": round(m.mean_response, 2),
+                             "n_completed": m.n_completed})
+            print(f"[bench_paged:packing] {wl_name:9s} {packing:9s} "
+                  f"thr={m.throughput:6.3f} req/s  "
+                  f"peak_parallel={sim.peak_parallel:3d}")
+    emit(rows, "bench_paged_packing_admissible")
+    emit(sim_rows, "bench_paged_packing_sim")
+    out = {"peak_admissible": rows, "sim": sim_rows}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "BENCH_paged.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[bench_paged:packing] -> {path}")
+    return out
+
+
 if __name__ == "__main__":
     if "--retain-only" not in sys.argv:
         bench_paged_sim()
+        bench_paged_packing()
     if "--real" in sys.argv or "--retain-only" in sys.argv:
         if "--retain-only" not in sys.argv:
             bench_paged_real()

@@ -19,15 +19,57 @@ import math
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.estimator import ServingTimeEstimator
-from repro.core.memory import MemoryEstimator
+from repro.core.memory import (MAX_BATCH_SIZE_CAP, MemoryEstimator,
+                               PagedMemoryEstimator)
 from repro.core.request import Batch, Request, bucket_len
+
+#: no-OOM bounds the DP may pack against: "batch-max" is the paper's
+#: Eq. 5–9 check ``fits(N, L_max, S)`` (every member charged the longest
+#: member's envelope); "envelope" charges each member its own
+#: ``blocks_for(L_j + S)`` via ``PagedMemoryEstimator.fits_envelope`` —
+#: at least as permissive, exact on the paged engines which reserve
+#: per-request envelopes anyway (``StaticEngine.serve_batch_paged``)
+PACKING_MODES = ("batch-max", "envelope")
+
+
+def _check_packing(packing: str, mem: MemoryEstimator) -> None:
+    if packing not in PACKING_MODES:
+        raise ValueError(f"unknown packing {packing!r} "
+                         f"(expected one of {PACKING_MODES})")
+    if packing == "envelope" and not isinstance(mem, PagedMemoryEstimator):
+        raise ValueError(
+            f"packing='envelope' charges per-request block envelopes, "
+            f"which needs a PagedMemoryEstimator (kv_layout='paged'); "
+            f"got {type(mem).__name__}")
+
+
+def batch_fits(b: Batch, mem: MemoryEstimator,
+               packing: str = "batch-max") -> bool:
+    """Eq. 5–9 feasibility of an already-composed batch under either
+    packing bound — the recheck used after ``bucketed_pred_batch``
+    rewrites slice lengths, and by tests/audit."""
+    S = int(b.slice_len)
+    if packing == "envelope":
+        total = sum(mem.blocks_per_request(r.effective_input_len, S)
+                    for r in b.requests)
+        return mem.fits_envelope(total)
+    return mem.fits(b.size, int(b.input_len), S)
 
 
 def dp_batch(requests: Sequence[Request], slice_len: int,
              est: ServingTimeEstimator, mem: MemoryEstimator,
-             max_batch_size: Optional[int] = None) -> List[Batch]:
+             max_batch_size: Optional[int] = None,
+             packing: str = "batch-max") -> List[Batch]:
     """Algorithm 1.  ``max_batch_size`` caps N (None = unbounded, the full
-    adaptive batcher; the PM ablation passes the engine's fixed size)."""
+    adaptive batcher; the PM ablation passes the engine's fixed size).
+
+    ``packing`` picks the no-OOM bound (``PACKING_MODES``): the default
+    "batch-max" transition is the paper's O(1) closed form; "envelope"
+    keeps O(1) transitions by prefix-summing the sorted requests'
+    per-request block envelopes, so a batch over ``reqs[j-1:i]`` is
+    charged exactly ``pre[i] - pre[j-1]`` blocks.
+    """
+    _check_packing(packing, mem)
     if not requests:
         return []
     reqs = sorted(requests, key=lambda r: r.effective_input_len)
@@ -37,6 +79,10 @@ def dp_batch(requests: Sequence[Request], slice_len: int,
     P = [0] * (n + 1)      # split positions
 
     lens = [r.effective_input_len for r in reqs]
+    pre = [0] * (n + 1)  # envelope mode: prefix sums of per-request blocks
+    if packing == "envelope":
+        for idx, L in enumerate(lens):
+            pre[idx + 1] = pre[idx] + mem.blocks_per_request(L, slice_len)
     for i in range(1, n + 1):
         L_i = lens[i - 1]
         # request i as its own batch
@@ -48,7 +94,16 @@ def dp_batch(requests: Sequence[Request], slice_len: int,
             N = i - j + 1
             if max_batch_size is not None and N > max_batch_size:
                 break
-            if not mem.fits(N, L_i, slice_len):
+            if packing == "envelope":
+                # Σ blocks over reqs[j-1:i] grows as j widens left and
+                # fits_envelope is monotone in it, so breaking on the
+                # first failure is exact; fits_envelope cannot bound N
+                # when the pool is unbounded (Δ = 0), so cap N here
+                if N > MAX_BATCH_SIZE_CAP:
+                    break
+                if not mem.fits_envelope(pre[i] - pre[j - 1]):
+                    break
+            elif not mem.fits(N, L_i, slice_len):
                 break
             t = T[j - 1] + est.t_serve(N, L_i, slice_len)
             if t < T[i]:
@@ -74,7 +129,8 @@ def dp_batch(requests: Sequence[Request], slice_len: int,
 def bucketed_pred_batch(requests: Sequence[Request], caps: Dict[int, int],
                         slice_len: int, est: ServingTimeEstimator,
                         mem: MemoryEstimator, phi: float = 2.0,
-                        min_slice: int = 16) -> List[Batch]:
+                        min_slice: int = 16,
+                        packing: str = "batch-max") -> List[Batch]:
     """Length-prediction-aware batching (``scls-pred`` / refactored ORACLE).
 
     ``caps[rid]`` is the calibrated remaining-length cap for each request.
@@ -112,12 +168,25 @@ def bucketed_pred_batch(requests: Sequence[Request], caps: Dict[int, int],
     batches: List[Batch] = []
     for key, group in sorted(groups.items()):
         if key == -1:
-            batches.extend(dp_batch(group, slice_len, est, mem))
+            batches.extend(dp_batch(group, slice_len, est, mem,
+                                    packing=packing))
             continue
         bucket_cap = min(slice_len, max(eff[r.rid] for r in group))
-        for b in dp_batch(group, bucket_cap, est, mem):
+        for b in dp_batch(group, bucket_cap, est, mem, packing=packing):
             b.slice_len = min(slice_len, max(eff[r.rid] for r in b.requests))
             b.est_time = est.t_serve(b.size, b.input_len, b.slice_len)
+            # the DP admitted this batch under Eq. 5–9 at slice =
+            # bucket_cap ≥ b.slice_len; every shipped estimator's bound is
+            # monotone in S, so the shrunk batch still fits — but that was
+            # previously assumed, not checked.  Recompute the bound against
+            # the FINAL slice length so a non-monotone estimator (a future
+            # rule table, say) fails loudly here instead of OOMing a worker.
+            if not batch_fits(b, mem, packing):
+                raise RuntimeError(
+                    f"bucketed_pred_batch: batch of {b.size} no longer "
+                    f"satisfies the Eq. 5–9 bound after shrinking slice "
+                    f"{bucket_cap} -> {b.slice_len} (non-monotone memory "
+                    f"estimator {type(mem).__name__}?)")
             batches.append(b)
     return batches
 
@@ -131,14 +200,29 @@ def batch_audit_fields(b: Batch, mem: MemoryEstimator) -> Dict[str, object]:
     the batch, and the Eq. 5–9 memory bound ``max_batch_size(L_i, S)``
     the no-OOM constraint compared ``N`` against.  Pure read — safe to
     call from observability hooks on a live scheduler.
+
+    On a block-pool estimator the record additionally carries the
+    envelope-exact view of the same bound: ``envelope_blocks`` (the sum
+    of the members' per-request ``blocks_for(L_j + S)`` charges — what
+    the paged engine actually reserves) and ``envelope_fits`` (its
+    ``fits_envelope`` verdict), regardless of which packing mode composed
+    the batch — so audits of batch-max runs show the blocks the tighter
+    bound would have freed.
     """
-    return dict(
+    fields: Dict[str, object] = dict(
         rids=sorted(r.rid for r in b.requests),
         slice_len=int(b.slice_len),
         input_len=int(b.input_len),
         est_time=float(b.est_time),
         mem_bound=int(mem.max_batch_size(int(b.input_len),
                                          int(b.slice_len))))
+    if isinstance(mem, PagedMemoryEstimator):
+        env = sum(mem.blocks_per_request(r.effective_input_len,
+                                         int(b.slice_len))
+                  for r in b.requests)
+        fields["envelope_blocks"] = int(env)
+        fields["envelope_fits"] = bool(mem.fits_envelope(env))
+    return fields
 
 
 def fcfs_batch(requests: Sequence[Request], batch_size: int, slice_len: int,

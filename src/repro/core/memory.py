@@ -170,6 +170,27 @@ class PagedMemoryEstimator(MemoryEstimator):
         return min(self.free_blocks // self.blocks_per_request(L_i, S),
                    MAX_BATCH_SIZE_CAP)
 
+    def fits_envelope(self, prefix_blocks: int) -> bool:
+        """Envelope-exact Eq. 5–9: admit a batch charged the SUM of its
+        members' per-request envelopes Σ_j ⌈(L_j + S)/pg⌉, not the
+        batch-max ``N · ⌈(L_max + S)/pg⌉`` that ``fits`` rounds up to.
+        Since Σ_j blocks_j ≤ N · blocks_max always, this bound is at
+        least as permissive as ``fits`` for the same batch — mixed-length
+        batches stop paying for the longest member's envelope N times.
+
+        ``prefix_blocks`` is that sum (the envelope DP supplies it as a
+        prefix-sum difference, keeping each transition O(1)).  Monotone:
+        widening a sorted batch only grows the sum, so a DP may break on
+        the first failure.  When Δ = 0 the pool is unbounded and nothing
+        binds — callers must cap N at ``MAX_BATCH_SIZE_CAP`` themselves
+        (``fits`` bounds N directly; a block sum cannot).
+        """
+        if prefix_blocks <= 0:
+            return True
+        if self.total_blocks == 0:  # Δ = 0: memory model cannot bind
+            return True
+        return prefix_blocks <= self.free_blocks
+
     # ------------------------------------------------------------------
     # in-flight accounting (cluster runtimes)
     # ------------------------------------------------------------------

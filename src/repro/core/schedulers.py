@@ -62,6 +62,13 @@ class StrategyConfig:
     # parallelism is bounded by real free memory instead of a slot count.
     # Continuous-mode runtimes require a PagedMemoryEstimator when "paged".
     kv_layout: str = "dense"
+    # Algorithm-1 no-OOM bound (core.batcher.PACKING_MODES): "batch-max"
+    # charges every member the longest member's (L_i + S) envelope (the
+    # paper's O(1) closed form — the default, pinned by the goldens);
+    # "envelope" charges each member its own blocks_for(L_j + S) via
+    # prefix sums — at least as permissive, requires kv_layout="paged"
+    # (the bound is exact only against a block pool).
+    packing: str = "batch-max"
     # SCLS-PRED / ORACLE (mode "pred"): generation-length prediction
     predictor: Optional[str] = None   # "histogram" | "proxy" | "perfect"
     coverage: float = 0.7             # calibration target quantile
@@ -78,20 +85,29 @@ def make_strategy(name: str, slice_len: int = 128, max_gen: int = 1024,
                   lam: float = 0.5, max_parallel: int = 12,
                   predictor: str = "histogram", coverage: float = 0.7,
                   bucket_phi: float = 2.0,
-                  kv_layout: str = "dense") -> StrategyConfig:
+                  kv_layout: str = "dense",
+                  packing: str = "batch-max") -> StrategyConfig:
     name = name.lower()
     if kv_layout not in ("dense", "paged"):
         raise ValueError(f"unknown kv_layout {kv_layout!r}")
+    if packing not in ("batch-max", "envelope"):
+        raise ValueError(f"unknown packing {packing!r} "
+                         f"(expected 'batch-max' or 'envelope')")
+    if packing == "envelope" and kv_layout != "paged":
+        raise ValueError(
+            "packing='envelope' charges per-request block envelopes, "
+            "which only a paged block pool can account exactly; set "
+            "kv_layout='paged' (or keep the default 'batch-max' bound)")
     base = dict(slice_len=slice_len, max_gen=max_gen, gamma=gamma, lam=lam,
-                kv_layout=kv_layout)
+                kv_layout=kv_layout, packing=packing)
     if name == "sls":
         return StrategyConfig("SLS", "perreq", slice_len=max_gen, max_gen=max_gen,
                               fixed_batch_size=fixed_batch_size, gamma=gamma,
-                              lam=lam, kv_layout=kv_layout)
+                              lam=lam, kv_layout=kv_layout, packing=packing)
     if name == "ils":
         return StrategyConfig("ILS", "continuous", slice_len=max_gen, max_gen=max_gen,
                               max_parallel=max_parallel, gamma=gamma, lam=lam,
-                              kv_layout=kv_layout)
+                              kv_layout=kv_layout, packing=packing)
     if name == "so":
         return StrategyConfig("SO", "perreq", fixed_batch_size=fixed_batch_size, **base)
     if name == "pm":

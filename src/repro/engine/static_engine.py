@@ -78,13 +78,18 @@ class StaticEngine:
                  extra_inputs: Optional[Dict[str, np.ndarray]] = None,
                  kv_layout: str = "dense", page_tokens: int = 16,
                  kv_pool_tokens: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, attn_impl: str = "unfused"):
         self.model = model
         self.params = params
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.len_bucket = len_bucket
         self.extra_inputs = extra_inputs or {}
+        if attn_impl not in ("unfused", "fused"):
+            raise ValueError(f"unknown attn_impl {attn_impl!r}")
+        # "fused" routes the paged path through the fused RoPE+page-write /
+        # RoPE+append+attention kernels; "unfused" is the baseline
+        self.attn_impl = attn_impl
         self._compiled: Dict[Tuple[int, int, int], object] = {}
         self.compile_seconds = 0.0
         if kv_layout not in ("dense", "paged"):
@@ -129,7 +134,8 @@ class StaticEngine:
                              jnp.full((tokens.shape[0], W), -1, jnp.int32),
                              jnp.zeros((tokens.shape[0],), jnp.int32))
                 logits, cache = _tfm.prefill_paged(params, cfg, tokens,
-                                                   lengths, cache)
+                                                   lengths, cache,
+                                                   attn_impl=attn_impl)
                 return greedy(logits), cache.k_pages, cache.v_pages
 
             def _prefill_tail(params, tokens, start, lengths, k_pages,
@@ -139,7 +145,8 @@ class StaticEngine:
                              jnp.full((tokens.shape[0], W), -1, jnp.int32),
                              jnp.zeros((tokens.shape[0],), jnp.int32))
                 logits, cache = _tfm.prefill_tail_paged(params, cfg, tokens,
-                                                        start, lengths, cache)
+                                                        start, lengths, cache,
+                                                        attn_impl=attn_impl)
                 return greedy(logits), cache.k_pages, cache.v_pages
 
             # donate the pool buffers so XLA updates them in place (the
@@ -202,6 +209,7 @@ class StaticEngine:
         from repro.kvcache.paged import PagedKVCache
         from repro.models import transformer as tfm
         cfg, eos = self.model.cfg, self.eos_id
+        attn_impl = self.attn_impl
         # pool buffers donated in place, as in _prefill_paged (CPU ignores
         # donation and warns, so only donate on accelerators)
         donate = (() if jax.default_backend() == "cpu" else (1, 2))
@@ -225,7 +233,8 @@ class StaticEngine:
                 done = done | (cur == eos) | (gen_count >= forced)
                 q_pos = row_len + step  # compact layout: slot == position
                 logits, cache = tfm.decode_step_paged(params, cfg, cache,
-                                                      cur, q_pos, q_pos)
+                                                      cur, q_pos, q_pos,
+                                                      attn_impl=attn_impl)
                 nxt = greedy(logits)
                 return step + 1, nxt, cache, done, out
 

@@ -1,0 +1,173 @@
+"""Fused RoPE + page append + paged decode attention — Pallas TPU kernel.
+
+The unfused decode step is three passes: rotate the new q/k token in
+plain jnp, scatter the rotated k (and v) into its page slot with an XLA
+scatter, then launch ``kernels.paged_decode_attention`` to stream every
+page back out of HBM.  This kernel does all of it in ONE launch: each
+(row, kv-head, page) grid step rotates the new token in-register (angle
+from the scalar-prefetched ``q_pos``), injects it into the current page's
+K/V tile *before* scoring (so attention sees the post-write state —
+exactly the unfused ordering), folds the tile into the running softmax,
+and DMA's the modified tile back through ``input_output_aliases``.  The
+new token's K/V thus lands in the pool as a side effect of the attention
+stream it was already paying for.
+
+Pages of different rows are disjoint by the allocator contract, so the
+per-(b,h,j) aliased tile writes never collide — except on the null page 0
+shared by short rows' unowned blocks, whose contents are never observable
+(masked by ``slot_pos``), same discipline as the write kernel.  The jnp
+oracle is ``kernels.ref.fused_rope_decode_append_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(bt_ref, slot_ref, q_pos_ref, slot_pos_ref, q_ref, kn_ref, vn_ref,
+            k_in, v_in, ko_ref, vo_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, window: Optional[int], nb: int, pg: int,
+            theta: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = q_pos_ref[b]           # () int32 — absolute position of the token
+    slot = slot_ref[b]             # () int32 — its destination logical slot
+    slot_pos = slot_pos_ref[0, :]  # (pg,) — logical slots of page j
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D) unrotated
+    kn = kn_ref[0, 0].astype(jnp.float32)  # (1, D) unrotated new-token K
+    vn = vn_ref[0, 0]                      # (1, D) new-token V
+
+    D = q.shape[-1]
+    half = D // 2
+    # identical arithmetic to models.common.apply_rope at position q_pos;
+    # iota*2 rebuilds arange(0, D, 2) without capturing a traced constant
+    ar = jax.lax.broadcasted_iota(jnp.float32, (1, half), 1) * 2.0
+    freqs = 1.0 / (theta ** (ar / D))            # (1, half)
+    ang = q_pos.astype(jnp.float32) * freqs      # (1, half)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    q1, q2 = q[:, :half], q[:, half:]
+    qr = jnp.concatenate([q1 * cos - q2 * sin, q2 * cos + q1 * sin], axis=-1)
+    k1, k2 = kn[:, :half], kn[:, half:]
+    knr = jnp.concatenate([k1 * cos - k2 * sin, k2 * cos + k1 * sin], axis=-1)
+
+    # inject the rotated new token into this page's tile iff it lives here,
+    # BEFORE scoring — attention reads the post-append cache state
+    row = jax.lax.broadcasted_iota(jnp.int32, (pg, 1), 0)     # (pg, 1)
+    hit = (row == slot % pg) & (j == slot // pg)              # (pg, 1)
+    k_tile = jnp.where(hit, knr.astype(k_in.dtype), k_in[0, :, 0])
+    v_tile = jnp.where(hit, vn.astype(v_in.dtype), v_in[0, :, 0])
+    ko_ref[...] = k_tile[None, :, None, :]
+    vo_ref[...] = v_tile[None, :, None, :]
+
+    s = jax.lax.dot_general(qr, k_tile.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = (slot_pos >= 0) & (slot_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - slot_pos < window)
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_tile.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / l_scr[...][:, None]).astype(o_ref.dtype)
+
+
+def fused_rope_decode_append(q: jnp.ndarray, k_new: jnp.ndarray,
+                             v_new: jnp.ndarray, block_table: jnp.ndarray,
+                             slot_pos: jnp.ndarray, slots: jnp.ndarray,
+                             q_pos: jnp.ndarray, k_pages: jnp.ndarray,
+                             v_pages: jnp.ndarray, theta: float = 10000.0,
+                             window: Optional[int] = None,
+                             scale: Optional[float] = None,
+                             interpret: bool = False):
+    """q (B,Hq,D) and k/v_new (B,Hkv,D) *unrotated* new-token projections;
+    block_table (B,nb); slot_pos (B,nb·pg) already marking the new token's
+    slot (it must attend to itself); slots (B,) destination logical slot;
+    q_pos (B,) absolute position (== slots in the compact layout);
+    k/v_pages (P,pg,Hkv,D).  Returns (out (B,Hq,D), k_pages, v_pages)."""
+    B, Hq, D = q.shape
+    pg, Hkv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_table.shape[1]
+    assert slot_pos.shape == (B, nb * pg), (slot_pos.shape, (B, nb * pg))
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    qg = q.reshape(B, Hkv, G, D)
+    kg = k_new.reshape(B, Hkv, 1, D)
+    vg = v_new.reshape(B, Hkv, 1, D)
+    kernel = functools.partial(_kernel, scale=scale, window=window, nb=nb,
+                               pg=pg, theta=float(theta))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # block_table + slots + q_pos
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, pg), lambda b, h, j, bt, sl, qp: (b, j)),
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, bt, sl, qp: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, j, bt, sl, qp: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, j, bt, sl, qp: (b, h, 0, 0)),
+            # aliased pool inputs: read-modify-write of the (page, head) tile
+            pl.BlockSpec((1, pg, 1, D),
+                         lambda b, h, j, bt, sl, qp: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, pg, 1, D),
+                         lambda b, h, j, bt, sl, qp: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, pg, 1, D),
+                         lambda b, h, j, bt, sl, qp: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, pg, 1, D),
+                         lambda b, h, j, bt, sl, qp: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, bt, sl, qp: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out_k, out_v, out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                   jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+                   jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype)],
+        # operand indices count the scalar-prefetch args: (bt, slots, q_pos,
+        # slot_pos, q, k_new, v_new, k_pages, v_pages) -> pools are 7 and 8
+        input_output_aliases={7: 0, 8: 1},
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), slots.astype(jnp.int32),
+      q_pos.astype(jnp.int32), slot_pos.astype(jnp.int32), qg, kg, vg,
+      k_pages, v_pages)
+    return out.reshape(B, Hq, D), out_k, out_v

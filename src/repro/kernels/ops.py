@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_prefill import flash_prefill as _prefill_pallas
+from repro.kernels.fused_rope_decode_append import (
+    fused_rope_decode_append as _fused_decode_pallas)
+from repro.kernels.fused_rope_prefill_write import (
+    fused_rope_prefill_write as _fused_write_pallas)
 from repro.kernels.paged_decode_attention import (
     paged_decode_attention as _paged_decode_pallas)
 from repro.kernels.paged_prefill_write import (
@@ -117,6 +121,64 @@ def paged_prefill_write(k_new, v_new, positions, block_table, k_pages,
                                    k_pages, v_pages, interpret=_interpret())
     return ref.paged_prefill_write_ref(k_new, v_new, positions, block_table,
                                        k_pages, v_pages)
+
+
+@partial(jax.jit, static_argnames=("theta", "impl"))
+def fused_rope_prefill_write(k_new, v_new, positions, block_table, k_pages,
+                             v_pages, theta: float = 10000.0,
+                             impl: Optional[str] = None):
+    """Rotate prefill K at its absolute positions AND write K/V into the
+    paged pool in one pass.
+
+    k/v_new (B,T,Hkv,D) left-padded *unrotated* projections; positions
+    (B,T) from ``models.transformer.make_positions`` (pads < 0, real
+    tokens at their absolute position == destination logical slot);
+    block_table (B,nb); k/v_pages (P,pg,Hkv,D).  Returns the updated
+    (k_pages, v_pages) — V unrotated, K rotated at its slot.  Slots below
+    a row's first real position (a shared-prefix tail) are preserved; the
+    Pallas path requires that first position to be page-aligned (the
+    engine shares whole pages only).  Tail slots of a row's last owned
+    page differ between impls (the Pallas kernel copies whole pages) but
+    are masked by ``slot_pos`` — never observable."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        T = positions.shape[1]
+        pad = jnp.sum(positions < 0, axis=1).astype(jnp.int32)
+        n_real = T - pad
+        start = jnp.maximum(
+            jnp.where(n_real > 0,
+                      jnp.max(positions, axis=1).astype(jnp.int32)
+                      - n_real + 1, 0), 0)
+        return _fused_write_pallas(k_new, v_new, pad - start, start,
+                                   block_table, k_pages, v_pages,
+                                   theta=theta, interpret=_interpret())
+    return ref.fused_rope_prefill_write_ref(k_new, v_new, positions,
+                                            block_table, k_pages, v_pages,
+                                            theta=theta)
+
+
+@partial(jax.jit, static_argnames=("theta", "window", "impl"))
+def fused_rope_decode_append(q, k_new, v_new, block_table, slot_pos, slots,
+                             q_pos, k_pages, v_pages, theta: float = 10000.0,
+                             window: Optional[int] = None,
+                             impl: Optional[str] = None):
+    """Rotate the new q/k token, append its K/V to its page slot, and run
+    paged decode attention — all in one launch.
+
+    q (B,Hq,D) and k/v_new (B,Hkv,D) *unrotated*; block_table (B,nb);
+    slot_pos (B,nb·pg) already marking the new token's slot; slots (B,)
+    destination logical slot; q_pos (B,) absolute position.  Returns
+    (out (B,Hq,D), k_pages, v_pages)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "pallas":
+        return _fused_decode_pallas(q, k_new, v_new, block_table, slot_pos,
+                                    slots, q_pos, k_pages, v_pages,
+                                    theta=theta, window=window,
+                                    interpret=_interpret())
+    return ref.fused_rope_decode_append_ref(q, k_new, v_new, block_table,
+                                            slot_pos, slots, q_pos,
+                                            k_pages, v_pages, theta=theta,
+                                            window=window)
 
 
 @partial(jax.jit, static_argnames=("chunk", "impl"))

@@ -61,6 +61,67 @@ def paged_prefill_write_ref(k_new: jnp.ndarray, v_new: jnp.ndarray,
     return k_pages, v_pages
 
 
+def _rope_ref(x: jnp.ndarray, positions: jnp.ndarray,
+              theta: float) -> jnp.ndarray:
+    """Llama half-rotation RoPE — arithmetic twin of
+    ``models.common.apply_rope`` kept local so the oracle module stays
+    free of model-package imports.  x (..., T, H, D); positions (..., T)."""
+    D = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, D, 2, dtype=jnp.float32) / D))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def fused_rope_prefill_write_ref(k_new: jnp.ndarray, v_new: jnp.ndarray,
+                                 positions: jnp.ndarray,
+                                 block_table: jnp.ndarray,
+                                 k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                                 theta: float = 10000.0):
+    """Rotate prefill K at its absolute positions, then scatter K/V into
+    the paged pool — the one-pass fused kernel's ground truth.
+
+    k/v_new (B,T,Hkv,D) *unrotated*; positions (B,T) (pads < 0, real
+    tokens at their absolute position == destination logical slot);
+    block_table (B,nb); k/v_pages (P,pg,Hkv,D).  Returns the updated
+    (k_pages, v_pages); V is written unrotated."""
+    kr = _rope_ref(k_new, jnp.maximum(positions, 0), theta)
+    return paged_prefill_write_ref(kr, v_new, positions, block_table,
+                                   k_pages, v_pages)
+
+
+def fused_rope_decode_append_ref(q: jnp.ndarray, k_new: jnp.ndarray,
+                                 v_new: jnp.ndarray, block_table: jnp.ndarray,
+                                 slot_pos: jnp.ndarray, slots: jnp.ndarray,
+                                 q_pos: jnp.ndarray, k_pages: jnp.ndarray,
+                                 v_pages: jnp.ndarray, theta: float = 10000.0,
+                                 window: Optional[int] = None,
+                                 scale: Optional[float] = None):
+    """Rotate the new q/k token at ``q_pos``, append its K/V to page slot
+    ``slots``, then run paged decode attention over the post-append pool —
+    the fused decode kernel's ground truth.
+
+    q (B,Hq,D) and k/v_new (B,Hkv,D) *unrotated*; slot_pos (B,nb·pg)
+    already marks the new token's slot (it attends to itself); slots (B,)
+    destination logical slot; q_pos (B,).  Returns
+    (out (B,Hq,D), k_pages, v_pages)."""
+    qr = _rope_ref(q[:, None], q_pos[:, None], theta)[:, 0]
+    knr = _rope_ref(k_new[:, None], q_pos[:, None], theta)[:, 0]
+    pg = k_pages.shape[1]
+    page = jnp.take_along_axis(block_table, (slots // pg)[:, None],
+                               axis=1)[:, 0]
+    off = slots % pg
+    k_pages = k_pages.at[page, off].set(knr.astype(k_pages.dtype))
+    v_pages = v_pages.at[page, off].set(v_new.astype(v_pages.dtype))
+    out = paged_decode_attention_ref(qr, k_pages, v_pages, block_table,
+                                     slot_pos, q_pos, window=window,
+                                     scale=scale)
+    return out, k_pages, v_pages
+
+
 def paged_decode_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                                v_pages: jnp.ndarray, block_table: jnp.ndarray,
                                slot_pos: jnp.ndarray, q_pos: jnp.ndarray,

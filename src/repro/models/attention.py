@@ -239,6 +239,7 @@ def attention_prefill_paged(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
                             k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                             block_table: jnp.ndarray,
                             mask: Optional[jnp.ndarray] = None,
+                            impl: str = "unfused",
                             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Prefill that lands K/V in the paged pool (``repro.kvcache``).
 
@@ -249,14 +250,46 @@ def attention_prefill_paged(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
     Mirrors ``attention_decode_paged`` so prefill and decode both read
     and write the same persistent page pool.  Returns
     (out, k_pages, v_pages).
+
+    ``impl="fused"`` routes K through
+    ``kernels.ops.fused_rope_prefill_write`` — RoPE applied in-register
+    while the pages are written, no rotated-K tensor in HBM — and the
+    queries attend against the rotated K/V gathered back from the pages
+    (the read attention pays anyway).  ``"unfused"`` is the correctness
+    baseline.  Long prompts (T >= CHUNK_THRESHOLD) always take the
+    unfused chunked path.
     """
     from repro.kernels import ops as kernel_ops  # deferred: keep models importable without kernels
+    assert impl in ("unfused", "fused"), impl
     B, T, _ = x.shape
     q, k, v = _qkv(p, x, cfg)
     rp = jnp.maximum(positions, 0)
     q = apply_rope(q, rp, cfg.rope_theta)
-    k = apply_rope(k, rp, cfg.rope_theta)
     scale = cfg.head_dim ** -0.5
+    if impl == "fused" and T < CHUNK_THRESHOLD:
+        # one pass over K: rotate in-register + write pages; attention
+        # reads the rotated K/V back through the block tables (slot ==
+        # position in the compact layout)
+        k_pages, v_pages = kernel_ops.fused_rope_prefill_write(
+            k, v, positions, block_table, k_pages, v_pages,
+            theta=cfg.rope_theta)
+        pg, Hkv = k_pages.shape[1], k_pages.shape[2]
+        nb = block_table.shape[1]
+        kw = k_pages[block_table].reshape(B, nb * pg, Hkv, k_pages.shape[-1])
+        vw = v_pages[block_table].reshape(B, nb * pg, Hkv, v_pages.shape[-1])
+        lengths = jnp.sum(positions >= 0, axis=1)
+        slots = jnp.arange(nb * pg, dtype=jnp.int32)[None]
+        pk = jnp.where(slots < lengths[:, None], slots, -1)[:, None, :]
+        pq = positions[:, :, None]
+        m = (pk >= 0) & (pk <= pq)
+        if window is not None:
+            m = m & (pq - pk < window)
+        # pad query rows would be fully masked -> attend slot 0 (NaN guard)
+        m = m | ((pq < 0) & (jnp.arange(nb * pg)[None, None, :] == 0))
+        o = gqa_attend(q, kw, vw, m[:, None], scale)
+        out = dense_apply(p["wo"], o.reshape(B, T, -1))
+        return out, k_pages, v_pages
+    k = apply_rope(k, rp, cfg.rope_theta)
     if T >= CHUNK_THRESHOLD:
         o = gqa_attend_chunked(q, k, v, scale, positions, positions, window)
     else:
@@ -275,6 +308,7 @@ def attention_prefill_tail_paged(p: Params, x: jnp.ndarray,
                                  k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                                  block_table: jnp.ndarray,
                                  slot_pos: jnp.ndarray,
+                                 impl: str = "unfused",
                                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Tail prefill over a paged pool whose head KV is already resident.
 
@@ -290,17 +324,27 @@ def attention_prefill_tail_paged(p: Params, x: jnp.ndarray,
     covers prefix attention and tail self-attention.  Shared prefix pages
     are only read: tail writes land at positions past the shared head by
     construction (the engine shares full pages only).
+
+    ``impl="fused"`` fuses the tail K rotation into the page write
+    (``kernels.ops.fused_rope_prefill_write``); the gathered-window
+    attention below is shared by both impls.
     """
     from repro.kernels import ops as kernel_ops  # deferred: keep models importable without kernels
+    assert impl in ("unfused", "fused"), impl
     B, T, _ = x.shape
     pg = k_pages.shape[1]
     nb = block_table.shape[1]
     q, k, v = _qkv(p, x, cfg)
     rp = jnp.maximum(positions, 0)
     q = apply_rope(q, rp, cfg.rope_theta)
-    k = apply_rope(k, rp, cfg.rope_theta)
-    k_pages, v_pages = kernel_ops.paged_prefill_write(
-        k, v, positions, block_table, k_pages, v_pages)
+    if impl == "fused":
+        k_pages, v_pages = kernel_ops.fused_rope_prefill_write(
+            k, v, positions, block_table, k_pages, v_pages,
+            theta=cfg.rope_theta)
+    else:
+        k = apply_rope(k, rp, cfg.rope_theta)
+        k_pages, v_pages = kernel_ops.paged_prefill_write(
+            k, v, positions, block_table, k_pages, v_pages)
     Hkv = k_pages.shape[2]
     kw = k_pages[block_table].reshape(B, nb * pg, Hkv, k_pages.shape[-1])
     vw = v_pages[block_table].reshape(B, nb * pg, Hkv, v_pages.shape[-1])
@@ -365,7 +409,7 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, q_pos: jnp.ndarray,
                            k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                            block_table: jnp.ndarray, slot_pos: jnp.ndarray,
                            slots: jnp.ndarray, cfg: ModelConfig,
-                           window: Optional[int]
+                           window: Optional[int], impl: str = "unfused",
                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Decode over a paged KV cache (``repro.kvcache``) with per-row slots.
 
@@ -379,11 +423,24 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, q_pos: jnp.ndarray,
     ``kernels.ops.paged_decode_attention`` — pure-jnp gather on CPU, the
     Pallas page-streaming kernel on TPU — so the engine's paged path runs
     the kernel end to end.
+
+    ``impl="fused"`` hands the *unrotated* q/k/v to
+    ``kernels.ops.fused_rope_decode_append`` — one launch rotates the new
+    token, appends its K/V to the page slot, and streams the running
+    softmax; ``"unfused"`` (jnp rope + XLA scatter + attention kernel) is
+    the correctness baseline.
     """
     from repro.kernels import ops as kernel_ops  # deferred: keep models importable without kernels
+    assert impl in ("unfused", "fused"), impl
     B = x.shape[0]
     pg = k_pages.shape[1]
     q, k, v = _qkv(p, x, cfg)
+    if impl == "fused":
+        o, k_pages, v_pages = kernel_ops.fused_rope_decode_append(
+            q[:, 0], k[:, 0], v[:, 0], block_table, slot_pos, slots, q_pos,
+            k_pages, v_pages, theta=cfg.rope_theta, window=window)
+        out = dense_apply(p["wo"], o.reshape(B, 1, -1))
+        return out, k_pages, v_pages
     q = apply_rope(q, q_pos[:, None], cfg.rope_theta)
     k = apply_rope(k, q_pos[:, None], cfg.rope_theta)
     pages = jnp.take_along_axis(block_table, (slots // pg)[:, None], axis=1)[:, 0]

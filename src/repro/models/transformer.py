@@ -148,9 +148,13 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
 
 def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                   lengths: jnp.ndarray, cache: PagedKVCache,
-                  window: Optional[int] = None
+                  window: Optional[int] = None, attn_impl: str = "unfused"
                   ) -> Tuple[jnp.ndarray, PagedKVCache]:
     """Prefill that writes K/V straight into the paged pool.
+
+    ``attn_impl="fused"`` selects the fused RoPE+page-write kernel path
+    (``attention.attention_prefill_paged``); ``"unfused"`` (default) is
+    the correctness baseline.
 
     The paged twin of ``prefill``: same left-padded attention math, but
     per-layer K/V land in ``cache.k_pages``/``v_pages`` through the
@@ -173,7 +177,7 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
         x = rms_norm(carry, layer["ln_attn"], cfg.norm_eps)
         a, kp, vp = attn.attention_prefill_paged(
             layer["attn"], x, positions, cfg, window, kp, vp,
-            cache.block_table, mask=mask)
+            cache.block_table, mask=mask, impl=attn_impl)
         h2 = carry + a
         m = mlp_apply(layer["mlp"], rms_norm(h2, layer["ln_mlp"], cfg.norm_eps), cfg.act)
         return h2 + m, (kp, vp)
@@ -191,7 +195,8 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
 
 def prefill_tail_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                        start: jnp.ndarray, lengths: jnp.ndarray,
-                       cache: PagedKVCache, window: Optional[int] = None
+                       cache: PagedKVCache, window: Optional[int] = None,
+                       attn_impl: str = "unfused"
                        ) -> Tuple[jnp.ndarray, PagedKVCache]:
     """Prefill only the novel *tail* of rows whose prefix KV is resident.
 
@@ -219,7 +224,7 @@ def prefill_tail_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
         x = rms_norm(carry, layer["ln_attn"], cfg.norm_eps)
         a, kp, vp = attn.attention_prefill_tail_paged(
             layer["attn"], x, positions, cfg, window, kp, vp,
-            cache.block_table, slot_pos)
+            cache.block_table, slot_pos, impl=attn_impl)
         h2 = carry + a
         m = mlp_apply(layer["mlp"], rms_norm(h2, layer["ln_mlp"], cfg.norm_eps), cfg.act)
         return h2 + m, (kp, vp)
@@ -285,7 +290,8 @@ def decode_step_rowslots(params: Params, cfg: ModelConfig, cache: KVCache,
 
 def decode_step_paged(params: Params, cfg: ModelConfig, cache: PagedKVCache,
                       tokens: jnp.ndarray, q_pos: jnp.ndarray,
-                      slots: jnp.ndarray, window: Optional[int] = None
+                      slots: jnp.ndarray, window: Optional[int] = None,
+                      attn_impl: str = "unfused"
                       ) -> Tuple[jnp.ndarray, PagedKVCache]:
     """Continuous-batching decode over the paged cache (``repro.kvcache``).
 
@@ -305,7 +311,7 @@ def decode_step_paged(params: Params, cfg: ModelConfig, cache: PagedKVCache,
         x = rms_norm(carry, layer["ln_attn"], cfg.norm_eps)
         a, kp, vp = attn.attention_decode_paged(
             layer["attn"], x, q_pos, kp, vp, cache.block_table, slot_pos,
-            slots, cfg, window)
+            slots, cfg, window, impl=attn_impl)
         h2 = carry + a
         m = mlp_apply(layer["mlp"], rms_norm(h2, layer["ln_mlp"], cfg.norm_eps), cfg.act)
         return h2 + m, (kp, vp)

@@ -35,7 +35,8 @@ class PredictionPipeline:
             r, self.predictor.predict_remaining(r)) for r in reqs}
         return bucketed_pred_batch(reqs, caps, self.s.slice_len, est, mem,
                                    phi=self.s.bucket_phi,
-                                   min_slice=self.s.min_pred_slice)
+                                   min_slice=self.s.min_pred_slice,
+                                   packing=self.s.packing)
 
     def on_complete(self, req) -> None:
         """Online-learning feedback: every completed request trains the

@@ -103,6 +103,24 @@ class AdmissionDecision:
 # ---------------------------------------------------------------------------
 # the Eq. 1–4 / Eq. 10–11 completion-time prediction
 # ---------------------------------------------------------------------------
+def memory_admits_one(core: "SchedulerCore", input_len: int,
+                      first_slice: int) -> bool:
+    """Eq. 5–9 batch-of-one feasibility, under the strategy's packing mode.
+
+    With ``packing='envelope'`` the check routes through the same
+    envelope-exact bound the batcher packs against — the request is
+    charged exactly its own ``blocks_for(L + S)`` — so admission and
+    Algorithm 1 read ONE bound (for N = 1 the two bounds coincide
+    numerically; what matters is that they can never drift apart).
+    """
+    mem = core.mem
+    if core.s.packing == "envelope":
+        # validated at SchedulerCore construction: envelope => paged
+        return mem.fits_envelope(
+            mem.blocks_per_request(int(input_len), int(first_slice)))
+    return mem.max_batch_size(int(input_len), int(first_slice)) >= 1
+
+
 def predicted_queue_delay(core: "SchedulerCore") -> float:
     """Estimated core-time delay until a *new* arrival is first scheduled.
 
@@ -206,7 +224,7 @@ class AdmissionController:
         if not self.enabled:
             return AdmissionDecision.accepted()
         first_slice = min(int(core.s.slice_len), max(int(declared_gen), 1))
-        if core.mem.max_batch_size(int(input_len), first_slice) < 1:
+        if not memory_admits_one(core, int(input_len), first_slice):
             return AdmissionDecision.rejected(
                 f"prompt of {input_len} tokens does not fit worker memory "
                 f"even as a batch of one", reason_code="memory")

@@ -59,6 +59,12 @@ class ServingConfig:
     # --- KV layout (repro.kvcache) ---
     kv_layout: str = "dense"             # "dense" | "paged"
     page_tokens: int = 16
+    # Algorithm-1 no-OOM bound (core.batcher.PACKING_MODES): the default
+    # "batch-max" is the paper's closed form (and what the golden batch
+    # compositions pin); "envelope" charges each member its own
+    # blocks_for(L_j + S) — strictly tighter packing on mixed-length
+    # batches, needs kv_layout="paged"
+    packing: str = "batch-max"           # "batch-max" | "envelope"
     # envelope lifetime on the paged real backend: "slice" reserves and
     # releases per slice (re-prefill every reschedule, §3.3); "request"
     # keeps prefix pages resident in the engines across slices so a
@@ -156,6 +162,15 @@ class ServingConfig:
         if self.kv_retain not in ("slice", "request"):
             raise ValueError(f"unknown kv_retain {self.kv_retain!r} "
                              f"(expected 'slice' or 'request')")
+        if self.packing not in ("batch-max", "envelope"):
+            raise ValueError(f"unknown packing {self.packing!r} "
+                             f"(expected 'batch-max' or 'envelope')")
+        if self.packing == "envelope" and self.kv_layout != "paged":
+            raise ValueError(
+                "packing='envelope' charges per-request block envelopes, "
+                "which only a paged block pool can account exactly; use "
+                "kv_layout='paged' (--kv-layout paged) or the default "
+                "batch-max bound")
         if self.kv_retain == "request":
             if self.kv_layout != "paged":
                 raise ValueError(
@@ -224,6 +239,14 @@ class ServingConfig:
                              "reserves slice envelopes block by block")
         ap.add_argument("--page-tokens", type=int, default=cls.page_tokens,
                         help="cache slots per KV block for --kv-layout paged")
+        ap.add_argument("--packing", default=cls.packing,
+                        choices=["batch-max", "envelope"],
+                        help="Algorithm-1 no-OOM bound: 'batch-max' "
+                             "charges every batch member the longest "
+                             "member's (L_i + S) envelope (paper default); "
+                             "'envelope' charges each member its own "
+                             "block envelope — tighter packing, needs "
+                             "--kv-layout paged")
         ap.add_argument("--kv-retain", default=cls.kv_retain,
                         choices=["slice", "request"],
                         help="paged real backend: 'slice' releases each "
@@ -316,7 +339,8 @@ class ServingConfig:
                              predictor=self.predictor or "histogram",
                              coverage=self.coverage,
                              bucket_phi=self.bucket_phi,
-                             kv_layout=self.kv_layout)
+                             kv_layout=self.kv_layout,
+                             packing=self.packing)
 
     def memory_estimator(self, delta_bytes: float,
                          m_available: Optional[float] = None

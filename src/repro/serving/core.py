@@ -94,6 +94,13 @@ class SchedulerCore:
                 f"strategy {strategy.name} (mode {strategy.mode!r}) needs a "
                 f"continuous-capable backend; {type(backend).__name__} "
                 f"supports central-tick modes only")
+        if (strategy.packing == "envelope"
+                and not isinstance(mem, PagedMemoryEstimator)):
+            # fail at construction, not on the first scheduling tick
+            raise ValueError(
+                f"strategy {strategy.name} packs per-request envelopes "
+                f"(packing='envelope'), which needs a PagedMemoryEstimator; "
+                f"got {type(mem).__name__}")
         self.s = strategy
         self.backend = backend
         # pred mode: the shared predictor pipeline (one code path for all
@@ -390,7 +397,7 @@ class SchedulerCore:
         elif reqs:
             cap = self.s.dp_cap if self.s.dp_cap else None
             batches = dp_batch(reqs, self.s.slice_len, self.est, self.mem,
-                               max_batch_size=cap)
+                               max_batch_size=cap, packing=self.s.packing)
             for w, b in self._assign(batches):
                 wk = self.workers[w]
                 wk.queue.append(b)
@@ -447,6 +454,7 @@ class SchedulerCore:
         if w.busy or not w.queue:
             return
         b = w.queue.popleft()
+        self.peak_parallel = max(self.peak_parallel, b.size)
         self.batch_log.append(
             [_LOG_STATIC, w.wid, sorted(r.rid for r in b.requests),
              int(b.input_len), int(b.slice_len)])

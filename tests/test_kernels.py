@@ -321,3 +321,183 @@ def test_paged_prefill_write_ref_leaves_unmapped_pages_untouched():
     np.testing.assert_array_equal(kk[3, :2], np.ones((2, Hkv, D)))
     # pads hit only the null page
     assert (kk[3, 2:] == 7.0).all()
+
+
+# ---------------------------------------------------------------------------
+# fused RoPE + paged-KV kernels (PR 10)
+# ---------------------------------------------------------------------------
+def _fused_write_setup(B, T, pg, Hkv, D, dtype=jnp.float32, seed=0,
+                       starts=None):
+    """Left-padded unrotated prefill K/V + disjoint block tables.  With
+    ``starts`` (page-aligned), row b's first ``starts[b]`` slots play
+    resident/shared pages whose contents must be preserved."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(1, T + 1, size=B)
+    lens[0] = T
+    starts = [0] * B if starts is None else list(starts)
+    # positions: row b covers absolute slots starts[b] .. starts[b]+len-1
+    idx = np.arange(T)[None]
+    L = np.asarray(lens)[:, None]
+    pos = np.where(idx < T - L, -1,
+                   idx - (T - L) + np.asarray(starts)[:, None]).astype(np.int32)
+    nb = -(-(T + max(starts)) // pg) + 1
+    P = B * nb + 1
+    k_new = jax.random.normal(KEY, (B, T, Hkv, D), dtype)
+    v_new = jax.random.normal(jax.random.fold_in(KEY, 1), (B, T, Hkv, D), dtype)
+    bt = np.zeros((B, nb), np.int32)
+    perm = rng.permutation(np.arange(1, P))
+    for b in range(B):
+        bt[b] = perm[b * nb:(b + 1) * nb]
+    pool = jax.random.normal(jax.random.fold_in(KEY, 2), (P, pg, Hkv, D), dtype)
+    return (k_new, v_new, jnp.asarray(pos), jnp.asarray(bt), pool,
+            [int(x) for x in lens], starts, nb)
+
+
+@pytest.mark.parametrize("B,T,pg,Hkv,D", [
+    (1, 16, 8, 1, 8),
+    (2, 24, 8, 2, 16),
+    (3, 12, 4, 2, 8),   # non-pow2 batch, partial last page
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_rope_prefill_write_matches_oracle(B, T, pg, Hkv, D, dtype):
+    """ONE Pallas pass == rope-then-write oracle on every observable slot
+    (rotated K within atol; V bit-exact — the kernel never touches V math)."""
+    k_new, v_new, pos, bt, pool, lens, _, nb = _fused_write_setup(
+        B, T, pg, Hkv, D, dtype)
+    outs = {impl: ops.fused_rope_prefill_write(k_new, v_new, pos, bt,
+                                               pool, pool, impl=impl)
+            for impl in ("xla", "pallas")}
+    for b in range(B):
+        ln = lens[b]
+        gk = {i: np.asarray(o[0])[np.asarray(bt)[b]].reshape(nb * pg, Hkv, D)
+              for i, o in outs.items()}
+        gv = {i: np.asarray(o[1])[np.asarray(bt)[b]].reshape(nb * pg, Hkv, D)
+              for i, o in outs.items()}
+        np.testing.assert_allclose(
+            gk["pallas"][:ln].astype(np.float32),
+            gk["xla"][:ln].astype(np.float32), atol=ATOL[dtype])
+        np.testing.assert_array_equal(gv["pallas"][:ln], gv["xla"][:ln])
+
+
+def test_fused_prefill_write_tail_preserves_resident_pages():
+    """Shared-prefix tail (page-aligned start > 0): slots below start are
+    passed through BIT-EXACT from the aliased pool input; novel slots
+    match the oracle."""
+    B, T, pg, Hkv, D = 2, 16, 8, 2, 16
+    starts = [8, 0]  # row 0 resumes after one resident page
+    k_new, v_new, pos, bt, pool, lens, starts, nb = _fused_write_setup(
+        B, T, pg, Hkv, D, starts=starts, seed=3)
+    kx, vx = ops.fused_rope_prefill_write(k_new, v_new, pos, bt, pool, pool,
+                                          impl="xla")
+    kp, vp = ops.fused_rope_prefill_write(k_new, v_new, pos, bt, pool, pool,
+                                          impl="pallas")
+    bt_np = np.asarray(bt)
+    for b in range(B):
+        st, ln = starts[b], lens[b]
+        g = lambda arr: np.asarray(arr)[bt_np[b]].reshape(nb * pg, Hkv, D)
+        # resident slots: exactly the pre-existing pool contents
+        np.testing.assert_array_equal(g(kp)[:st], np.asarray(pool)[bt_np[b]]
+                                      .reshape(nb * pg, Hkv, D)[:st])
+        # novel slots: oracle agreement
+        np.testing.assert_allclose(g(kp)[st:st + ln], g(kx)[st:st + ln],
+                                   atol=2e-5)
+        np.testing.assert_array_equal(g(vp)[st:st + ln], g(vx)[st:st + ln])
+
+
+def test_fused_prefill_write_equals_unfused_two_pass():
+    """Fused == apply_rope (jnp) + paged_prefill_write: the fusion changes
+    pass count, never math."""
+    from repro.models.common import apply_rope
+    B, T, pg, Hkv, D = 2, 16, 8, 2, 16
+    k_new, v_new, pos, bt, pool, lens, _, nb = _fused_write_setup(
+        B, T, pg, Hkv, D, seed=5)
+    fused = ops.fused_rope_prefill_write(k_new, v_new, pos, bt, pool, pool,
+                                         impl="xla", theta=10000.0)
+    k_rot = apply_rope(k_new, jnp.maximum(pos, 0), 10000.0)
+    unfused = ops.paged_prefill_write(k_rot, v_new, pos, bt, pool, pool,
+                                      impl="xla")
+    for b in range(B):
+        ln = lens[b]
+        for f, u in zip(fused, unfused):
+            gf = np.asarray(f)[np.asarray(bt)[b]].reshape(nb * pg, Hkv, D)
+            gu = np.asarray(u)[np.asarray(bt)[b]].reshape(nb * pg, Hkv, D)
+            np.testing.assert_allclose(gf[:ln], gu[:ln], atol=2e-5)
+
+
+def _fused_decode_setup(B, nb, pg, Hq, Hkv, D, dtype=jnp.float32, seed=0):
+    """Paged pool mid-decode: each row has ``fill`` tokens resident and a
+    new token destined for slot ``fill`` (slot_pos already marks it — the
+    token must attend to itself)."""
+    P = B * nb + 1
+    kp = jax.random.normal(KEY, (P, pg, Hkv, D), dtype)
+    vp = jax.random.normal(jax.random.fold_in(KEY, 1), (P, pg, Hkv, D), dtype)
+    rng = np.random.default_rng(seed)
+    bt = np.zeros((B, nb), np.int32)
+    slot_pos = np.full((B, nb * pg), -1, np.int32)
+    slots = []
+    # pages of different rows must be DISJOINT (allocator contract — the
+    # fused kernel's aliased tile writes rely on it; only null page 0 is
+    # shared, and only by unmapped blocks)
+    perm = rng.permutation(np.arange(1, P))
+    for b in range(B):
+        fill = int(rng.integers(0, nb * pg))  # new token lands at slot fill
+        n_used = -(-(fill + 1) // pg)
+        bt[b, :n_used] = perm[b * nb:b * nb + n_used]
+        slot_pos[b, :fill + 1] = np.arange(fill + 1)
+        slots.append(fill)
+    q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hq, D), dtype)
+    kn = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Hkv, D), dtype)
+    vn = jax.random.normal(jax.random.fold_in(KEY, 4), (B, Hkv, D), dtype)
+    s = jnp.asarray(slots, jnp.int32)
+    return (q, kn, vn, jnp.asarray(bt), jnp.asarray(slot_pos), s, s, kp, vp)
+
+
+@pytest.mark.parametrize("B,nb,pg,Hq,Hkv,D", [
+    (1, 2, 8, 1, 1, 8),
+    (2, 3, 8, 4, 2, 16),
+    (4, 2, 8, 4, 1, 32),   # MQA
+    (3, 3, 8, 6, 2, 16),   # non-pow2 batch
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 6])
+def test_fused_rope_decode_append_matches_oracle(B, nb, pg, Hq, Hkv, D,
+                                                 dtype, window):
+    args = _fused_decode_setup(B, nb, pg, Hq, Hkv, D, dtype)
+    ox, kx, vx = ops.fused_rope_decode_append(*args, window=window,
+                                              impl="xla")
+    op_, kp_, vp_ = ops.fused_rope_decode_append(*args, window=window,
+                                                 impl="pallas")
+    np.testing.assert_allclose(np.asarray(op_.astype(jnp.float32)),
+                               np.asarray(ox.astype(jnp.float32)),
+                               atol=ATOL[dtype])
+    # the appended token's K/V landed identically in the pool
+    bt, slots = np.asarray(args[3]), np.asarray(args[5])
+    for b in range(B):
+        s = int(slots[b])
+        page, off = int(bt[b, s // pg]), s % pg
+        np.testing.assert_allclose(
+            np.asarray(kp_)[page, off].astype(np.float32),
+            np.asarray(kx)[page, off].astype(np.float32), atol=ATOL[dtype])
+        np.testing.assert_array_equal(np.asarray(vp_)[page, off],
+                                      np.asarray(vx)[page, off])
+
+
+def test_fused_decode_append_equals_unfused_three_pass():
+    """Fused == rope (jnp) + XLA scatter + paged_decode_attention: the
+    single launch reproduces the three-pass pipeline's math."""
+    from repro.models.common import apply_rope
+    B, nb, pg, Hq, Hkv, D = 2, 3, 8, 4, 2, 16
+    q, kn, vn, bt, slot_pos, slots, q_pos, kp, vp = _fused_decode_setup(
+        B, nb, pg, Hq, Hkv, D, seed=4)
+    fo, fk, fv = ops.fused_rope_decode_append(q, kn, vn, bt, slot_pos, slots,
+                                              q_pos, kp, vp, impl="xla")
+    qr = apply_rope(q[:, None], q_pos[:, None], 10000.0)[:, 0]
+    kr = apply_rope(kn[:, None], q_pos[:, None], 10000.0)[:, 0]
+    pages = bt[jnp.arange(B), slots // pg]
+    uk = kp.at[pages, slots % pg].set(kr)
+    uv = vp.at[pages, slots % pg].set(vn)
+    uo = ops.paged_decode_attention(qr, uk, uv, bt, slot_pos, q_pos,
+                                    impl="xla")
+    np.testing.assert_allclose(np.asarray(fo), np.asarray(uo), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(uk), atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(uv))

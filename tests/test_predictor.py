@@ -194,6 +194,52 @@ def test_bucketed_pred_batch_rejects_degenerate_phi():
         bucketed_pred_batch(reqs, {0: 4}, 128, est, mem, phi=1.0)
 
 
+class _SliceFloorMem(AnalyticMemoryEstimator):
+    """Pathologically NON-monotone in S: rejects any slice under 48 tokens.
+
+    Every shipped estimator's Eq. 5–9 bound loosens as the slice shrinks;
+    this one tightens instead, so a batch the DP admitted at the bucket cap
+    can become infeasible after ``bucketed_pred_batch`` shrinks the slice
+    to the batch's own largest cap."""
+
+    def fits(self, N, L_i, S):
+        return S >= 48 and super().fits(N, L_i, S)
+
+
+def test_bucketed_pred_batch_rechecks_bound_after_slice_shrink():
+    """Regression: the post-shrink Eq. 5–9 bound is re-evaluated at the
+    FINAL slice length, so a non-monotone estimator fails loudly instead
+    of shipping a batch that was only checked at the looser bucket cap."""
+    est = _est()
+    # 1.5e6 bytes: the long request fits alone but not paired, forcing the
+    # DP to split the bucket; the short batch then shrinks 60 -> 20, below
+    # the pathological 48-token floor.
+    mem = _SliceFloorMem(delta_bytes=1000.0, m_available=1.5e6)
+    reqs = [Request(rid=0, arrival=0.0, input_len=10, gen_len=1000),
+            Request(rid=1, arrival=0.0, input_len=1024, gen_len=1000)]
+    with pytest.raises(RuntimeError, match="no longer"):
+        bucketed_pred_batch(reqs, {0: 20, 1: 60}, 128, est, mem,
+                            phi=8.0, min_slice=16)
+
+
+def test_bucketed_pred_batch_envelope_packing_threads_through():
+    """packing='envelope' reaches the inner dp_batch calls, and every
+    returned batch satisfies the envelope bound at its final slice."""
+    from repro.core.batcher import batch_fits
+    from repro.core.memory import PagedMemoryEstimator
+    est = _est()
+    mem = PagedMemoryEstimator(delta_bytes=1000.0, m_available=1e7,
+                               page_tokens=16)
+    reqs = [Request(rid=i, arrival=0.0, input_len=32 + 100 * i, gen_len=1000)
+            for i in range(6)]
+    caps = {0: 4, 1: 20, 2: 30, 3: 200, 4: 500, 5: 90}
+    batches = bucketed_pred_batch(reqs, caps, 128, est, mem, min_slice=16,
+                                  packing="envelope")
+    assert sorted(r.rid for b in batches for r in b.requests) == list(range(6))
+    for b in batches:
+        assert batch_fits(b, mem, "envelope")
+
+
 # ---------------------------------------------------------------------------
 # end-to-end: the SCLS -> SCLS-PRED -> ORACLE ladder
 # ---------------------------------------------------------------------------

@@ -354,3 +354,77 @@ def test_retain_request_requires_persistent_engines(real_env):
     mem = scfg.memory_estimator(model.kv_bytes_per_token())
     with pytest.raises(TypeError, match="persistent-paged"):
         scfg.build_real([_dense_engine(model, params)], est, mem)
+
+
+# ---------------------------------------------------------------------------
+# fused RoPE+paged-KV kernels (PR 10): engine- and server-level sweeps
+# ---------------------------------------------------------------------------
+def _fused_engine(model, params, attn_impl, pool_tokens=512, page_tokens=8):
+    from repro.engine.static_engine import StaticEngine
+    return StaticEngine(model, params, eos_id=1, len_bucket=8,
+                        kv_layout="paged", page_tokens=page_tokens,
+                        kv_pool_tokens=pool_tokens, attn_impl=attn_impl)
+
+
+def test_fused_attn_impl_token_exact_vs_unfused(real_env):
+    """attn_impl="fused" (single-pass RoPE+write prefill, single-launch
+    RoPE+append+attend decode) must generate EXACTLY the unfused path's
+    tokens across >= 3 slices — covering the full-prefill, retained-resume
+    (tail), and decode kernels."""
+    arch, model, params, est = real_env
+    prompts = _prompts(arch, [7, 12, 4], seed=0)
+    totals = [20, 9, 16]
+
+    def run(impl):
+        eng = _fused_engine(model, params, impl)
+        outs = [[] for _ in prompts]
+        while any(len(o) < t for o, t in zip(outs, totals)):
+            idx = [i for i in range(len(prompts)) if len(outs[i]) < totals[i]]
+            res = eng.serve_batch_paged(
+                [prompts[i] for i in idx], 8, [100 + i for i in idx],
+                forced_gen_lens=[totals[i] - len(outs[i]) for i in idx],
+                already_generated=[outs[i] for i in idx])
+            for s, i in enumerate(idx):
+                outs[i].extend(res.results[s]["tokens"])
+        return outs
+
+    assert run("fused") == run("unfused")
+
+
+def test_fused_attn_impl_validated():
+    import jax
+    from repro.configs import get_config
+    from repro.engine.static_engine import StaticEngine
+    from repro.models.registry import get_model
+    arch = get_config("llama3.2-1b", reduced=True)
+    model = get_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attn_impl"):
+        StaticEngine(model, params, attn_impl="turbo")
+
+
+def test_fused_server_level_token_parity(real_env):
+    """Server-level sweep: a SliceServer over fused paged engines streams
+    exactly the tokens of one over unfused engines (same SCLS schedule,
+    same prompts)."""
+    arch, model, params, est = real_env
+    page_tokens = 8
+    scfg = ServingConfig(strategy="scls", backend="real", kv_layout="paged",
+                         page_tokens=page_tokens, kv_retain="request",
+                         slice_len=8, max_gen=24, gamma=0.25,
+                         m_available=64e6, mem_bucket=8, workers=1)
+    prompts = _prompts(arch, [12, 9, 5], seed=4)
+    gens = (14, 6, 10)
+    streams = {}
+    for impl in ("unfused", "fused"):
+        mem = scfg.memory_estimator(model.kv_bytes_per_token())
+        engines = [_fused_engine(model, params, impl,
+                                 pool_tokens=mem.total_blocks * page_tokens,
+                                 page_tokens=page_tokens)]
+        server = scfg.build_real(engines, est, mem)
+        handles = [server.submit(p, gen_len=g, max_gen=24, arrival=0.1 * i)
+                   for i, (p, g) in enumerate(zip(prompts, gens))]
+        server.drain()
+        assert all(h.done for h in handles)
+        streams[impl] = [h.request.output_tokens for h in handles]
+    assert streams["fused"] == streams["unfused"]

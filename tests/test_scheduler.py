@@ -8,12 +8,13 @@ from conftest import optional_hypothesis
 
 given, settings, st = optional_hypothesis()
 
-from repro.core.batcher import dp_batch, fcfs_batch
+from repro.core.batcher import batch_fits, dp_batch, fcfs_batch
 from repro.core.estimator import (LatencyCoeffs, ServingTimeEstimator,
                                   a100_llama13b_hf_profile,
                                   a100_llama13b_profile, fit_bilinear)
 from repro.core.interval import next_interval
 from repro.core.memory import (AnalyticMemoryEstimator,
+                               PagedMemoryEstimator,
                                RuleBasedMemoryEstimator, model_kv_delta)
 from repro.core.offloader import MaxMinOffloader, RoundRobinOffloader
 from repro.core.request import Batch, Request, bucket_len
@@ -249,3 +250,99 @@ def test_strategy_presets_match_paper_ablation():
     assert s["scls-pred"].predictor == "histogram"
     assert s["oracle"].predictor == "perfect"
     assert make_strategy("scls-pred", predictor="proxy").predictor == "proxy"
+
+
+# ---------------------------------------------------------------------------
+# envelope-exact packing (PR 10): per-request block envelopes in the DP
+# ---------------------------------------------------------------------------
+def _paged_mem(m_available=3e5, page_tokens=16, delta=100.0, zeta=1.0):
+    return PagedMemoryEstimator(delta_bytes=delta, m_available=m_available,
+                                page_tokens=page_tokens, zeta=zeta)
+
+
+def test_fits_envelope_bounds_and_unbounded_pool():
+    mem = _paged_mem()
+    assert mem.fits_envelope(0)
+    assert mem.fits_envelope(mem.free_blocks)
+    assert not mem.fits_envelope(mem.free_blocks + 1)
+    # Δ = 0: the pool cannot bind; callers cap N themselves
+    free = PagedMemoryEstimator(delta_bytes=0.0, m_available=1e9)
+    assert free.total_blocks == 0 and free.fits_envelope(10**9)
+
+
+def test_envelope_packing_requires_paged_estimator():
+    est = _est()
+    amem = AnalyticMemoryEstimator(delta_bytes=100.0, m_available=3e5)
+    with pytest.raises(ValueError, match="PagedMemoryEstimator"):
+        dp_batch(_requests([8, 16]), 32, est, amem, packing="envelope")
+    with pytest.raises(ValueError, match="packing"):
+        dp_batch(_requests([8]), 32, est, _paged_mem(), packing="tetris")
+
+
+def test_envelope_packs_strictly_tighter_on_near_equal_lengths():
+    """Near-equal lengths, page pool one block shy of N x blocks_max:
+    batch-max charges every member the longest envelope (4 x 31 = 124
+    blocks) and must split [2, 2]; the exact per-request sum (29 + 30 +
+    31 + 31 = 121) fits the 121-block pool, so envelope packs all four
+    in one batch at strictly lower total estimated time."""
+    est = _est()
+    S, pg = 64, 16
+    mem = _paged_mem(m_available=121 * pg * 100.0, page_tokens=pg)
+    reqs = _requests([400, 410, 420, 430])
+    bm = dp_batch(reqs, S, est, mem)
+    env = dp_batch(reqs, S, est, mem, packing="envelope")
+    assert sorted(b.size for b in bm) == [2, 2]
+    assert [b.size for b in env] == [4]
+    assert sum(b.est_time for b in env) < sum(b.est_time for b in bm)
+    for b in env:
+        assert batch_fits(b, mem, "envelope")
+        assert not mem.fits(b.size, b.input_len, S)  # batch-max rejects it
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 512), min_size=1, max_size=10),
+       st.sampled_from([8, 16, 32]), st.sampled_from([8, 64, 128]),
+       st.sampled_from([2e4, 1e5, 5e5]))
+def test_envelope_packing_property(lens, pg, S, m_ava):
+    """Satellite acceptance (Hypothesis): envelope-exact packing (a) never
+    admits a batch whose summed blocks_for(L_j + S) exceeds the free
+    blocks, and (b) is always >= as permissive as the batch-max bound —
+    every batch-max-feasible batch is envelope-feasible, hence the DP
+    optimum over the larger feasible set is never worse."""
+    est = _est()
+    mem = _paged_mem(m_available=m_ava, page_tokens=pg)
+    reqs = _requests(lens)
+    env = dp_batch(reqs, S, est, mem, packing="envelope")
+    for b in env:
+        total = sum(mem.blocks_per_request(r.effective_input_len, S)
+                    for r in b.requests)
+        if b.size > 1:  # singleton batches are admitted unconditionally,
+            assert total <= mem.free_blocks  # exactly like batch-max
+    bm = dp_batch(reqs, S, est, mem)
+    for b in bm:
+        if b.size > 1:
+            assert batch_fits(b, mem, "envelope"), \
+                "a batch-max-feasible batch must be envelope-feasible"
+    assert (sum(b.est_time for b in env)
+            <= sum(b.est_time for b in bm) + 1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 256), min_size=1, max_size=8),
+       st.integers(1, 4))
+def test_envelope_respects_explicit_cap(lens, cap):
+    est = _est()
+    mem = _paged_mem(m_available=1e6)
+    batches = dp_batch(_requests(lens), 32, est, mem, max_batch_size=cap,
+                       packing="envelope")
+    assert all(b.size <= cap for b in batches)
+
+
+def test_make_strategy_packing_validation():
+    s = make_strategy("scls", kv_layout="paged", packing="envelope")
+    assert s.packing == "envelope"
+    assert make_strategy("scls").packing == "batch-max"
+    with pytest.raises(ValueError, match="paged"):
+        make_strategy("scls", packing="envelope")  # dense layout
+    with pytest.raises(ValueError, match="packing"):
+        make_strategy("scls", kv_layout="paged", packing="exact")

@@ -361,6 +361,49 @@ def test_strategy_config_and_memory_builders():
     assert isinstance(dense, AnalyticMemoryEstimator)
 
 
+def test_serving_config_packing_validation_and_cli():
+    """packing='envelope' (PR 10) is opt-in, paged-only, CLI-reachable."""
+    assert ServingConfig().packing == "batch-max"
+    assert ServingConfig().strategy_config().packing == "batch-max"
+    with pytest.raises(ValueError, match="packing"):
+        ServingConfig(packing="exact")
+    with pytest.raises(ValueError, match="paged"):
+        ServingConfig(packing="envelope")  # dense layout: no block pool
+    cfg = ServingConfig(strategy="scls-cb", kv_layout="paged",
+                        packing="envelope")
+    assert cfg.strategy_config().packing == "envelope"
+    cli = ServingConfig.from_cli(["--packing", "envelope",
+                                  "--kv-layout", "paged"])
+    assert cli.packing == "envelope"
+    with pytest.raises(SystemExit):  # invalid combo -> argparse error
+        ServingConfig.from_cli(["--packing", "envelope"])
+
+
+def test_envelope_packing_sim_end_to_end(sim_env):
+    """A paged sim run under packing='envelope' completes the same request
+    set as batch-max (correctness is packing-invariant; only grouping may
+    differ) — and SchedulerCore refuses envelope without a block pool."""
+    true_lat, est, _ = sim_env
+    trace = generate_trace(8.0, 20.0, CODEFUSE, seed=5)
+    done = {}
+    for packing in ("batch-max", "envelope"):
+        cfg = ServingConfig(strategy="scls-cb", kv_layout="paged",
+                            workers=2, packing=packing)
+        server = cfg.build_sim(true_lat, est)
+        assert isinstance(server.core.mem, PagedMemoryEstimator)
+        server.replay(copy.deepcopy(trace))
+        done[packing] = server.drain(20.0).n_completed
+        assert done[packing] > 0
+    assert done["envelope"] == done["batch-max"]
+
+    # construction guard: envelope needs the paged pool's block accounting
+    dense_env = default_sim_environment("hf")
+    with pytest.raises(ValueError, match="PagedMemoryEstimator"):
+        SchedulerCore(make_strategy("scls", kv_layout="paged",
+                                    packing="envelope"),
+                      SimBackend(dense_env[0]), 2, dense_env[1], dense_env[2])
+
+
 def test_continuous_strategy_rejected_on_noncontinuous_backend(sim_env):
     true_lat, est, mem = sim_env
 
